@@ -1,0 +1,52 @@
+"""Partitioning/placement wall-time scaling (production readiness: the
+dispatcher re-runs these on every failure/redeploy, so they must be fast at
+fleet-scale node counts)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import chain
+from repro.core.partitioner import partition_min_bottleneck
+from repro.core.placement import place_color_coding
+from repro.core.simulate import random_cluster
+
+from benchmarks.common import save, table, timer
+
+
+def run(seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    rows = []
+    # partitioner: layers sweep
+    for n_layers in (64, 256, 1024, 4096):
+        sizes = [(int(rng.integers(1e5, 1e7)), int(rng.integers(1e4, 1e6)))
+                 for _ in range(n_layers)]
+        g = chain(f"synth{n_layers}", sizes)
+        cap = g.total_param_bytes // 10
+        with timer() as t:
+            res = partition_min_bottleneck(g, cap)
+        rows.append({"stage": "partition", "size": n_layers,
+                     "time_ms": t.s * 1e3, "parts": res.n_parts})
+    # placement: node sweep (color coding, beyond the exact-DP limit)
+    g = chain("synth64", [(int(rng.integers(1e5, 1e7)), int(rng.integers(1e4, 1e6)))
+                          for _ in range(64)])
+    for n_nodes in (16, 32, 64, 128):
+        comm = random_cluster(n_nodes, g.total_param_bytes // 6, seed=seed)
+        part = partition_min_bottleneck(g, g.total_param_bytes // 6, max_parts=8)
+        with timer() as t:
+            res = place_color_coding(
+                list(part.boundaries), [p.param_bytes for p in part.partitions],
+                comm, n_classes=4, exact_limit=0, trials=40,
+            )
+        rows.append({"stage": "placement", "size": n_nodes,
+                     "time_ms": t.s * 1e3, "parts": len(part.partitions),
+                     "feasible": res.feasible})
+    payload = {"rows": rows}
+    save("algo_scaling", payload)
+    print(table(rows, ["stage", "size", "time_ms", "parts"],
+                "Algorithm wall-time scaling"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

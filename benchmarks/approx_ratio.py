@@ -1,0 +1,56 @@
+"""Paper Sec. 4 item 2: algorithm vs optimal -- empirical approximation ratio.
+
+On clusters small enough for the exact subset-DP on TRUE bandwidths, compare
+the SEIFER pipeline (quantized bandwidth classes + color coding) against the
+optimum, across class granularities."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.model_zoo import PAPER_MODELS
+from repro.core.partitioner import partition_min_bottleneck
+from repro.core.placement import place_color_coding, place_optimal
+from repro.core.simulate import random_cluster
+
+from benchmarks.common import save, table
+
+
+def run(trials: int = 24, n_nodes: int = 8, capacity_frac: float = 0.3, seed: int = 0) -> dict:
+    rows = []
+    for model, fn in PAPER_MODELS.items():
+        graph = fn()
+        biggest = max(l.param_bytes for l in graph.layers)
+        capacity = max(capacity_frac * graph.total_param_bytes, 1.05 * biggest)
+        part = partition_min_bottleneck(graph, int(capacity), max_parts=n_nodes)
+        if not part.feasible:
+            continue
+        weights = list(part.boundaries)
+        sizes = [p.param_bytes for p in part.partitions]
+        for classes in (1, 2, 4, 8, None):
+            ratios = []
+            for t in range(trials):
+                comm = random_cluster(n_nodes, capacity, seed=seed + 97 * t)
+                opt = place_optimal(weights, sizes, comm)
+                alg = place_color_coding(weights, sizes, comm, n_classes=classes,
+                                         seed=t, exact_limit=0, trials=80)
+                if opt.feasible and alg.feasible and opt.bottleneck_latency > 0:
+                    ratios.append(alg.bottleneck_latency / opt.bottleneck_latency)
+            if ratios:
+                rows.append({
+                    "model": model,
+                    "classes": classes if classes else "inf",
+                    "mean_ratio": float(np.mean(ratios)),
+                    "p95_ratio": float(np.quantile(ratios, 0.95)),
+                    "max_ratio": float(np.max(ratios)),
+                    "n": len(ratios),
+                })
+    payload = {"rows": rows, "n_nodes": n_nodes, "capacity_frac": capacity_frac}
+    save("approx_ratio", payload)
+    print(table(rows, ["model", "classes", "mean_ratio", "p95_ratio", "max_ratio", "n"],
+                "Color-coding placement vs optimal (approximation ratio)"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

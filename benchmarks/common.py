@@ -1,0 +1,44 @@
+"""Shared benchmark plumbing: result IO + table printing."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+RESULTS_DIR = Path(os.environ.get("BENCH_RESULTS", "results"))
+
+
+def save(name: str, payload) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"bench_{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def table(rows: list[dict], cols: list[str], title: str) -> str:
+    out = [f"== {title} =="]
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows)) for c in cols}
+    out.append("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        out.append("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+    return "\n".join(out)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0 or (1e-3 < abs(v) < 1e4):
+            return f"{v:.4g}"
+        return f"{v:.3e}"
+    return str(v)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

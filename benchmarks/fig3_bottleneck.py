@@ -1,0 +1,73 @@
+"""Paper Fig. 3: bottleneck latency vs model x capacity x nodes x classes.
+
+Reproduces the color-map experiment: randomly placed edge devices, distance-
+derived wireless bandwidths, ``trials`` seeds per cell (paper: 50), mean
+bottleneck latency per cell.  The paper's qualitative claims checked here:
+  * more nodes / higher capacity / more bandwidth classes => lower latency,
+  * improvement reaches ~2x (200% throughput) across the sweep.
+"""
+
+from __future__ import annotations
+
+from repro.core.model_zoo import PAPER_MODELS
+from repro.core.simulate import aggregate, sweep
+
+from benchmarks.common import save, table
+
+CAPACITY_FRACS = [0.15, 0.3, 0.6]  # node capacity as a fraction of model size
+NODE_COUNTS = [4, 8, 12]
+CLASS_COUNTS = [1, 2, 4, 8]
+
+
+def _capacities(graph) -> list[float]:
+    """Per-model node capacities; always >= the largest single layer."""
+    biggest = max(l.param_bytes for l in graph.layers)
+    return [
+        max(f * graph.total_param_bytes, 1.05 * biggest) for f in CAPACITY_FRACS
+    ]
+
+
+def run(trials: int = 12, seed: int = 0) -> dict:
+    results = []
+    for name, fn in PAPER_MODELS.items():
+        graph = fn()
+        results += sweep(
+            {name: fn},
+            capacities=_capacities(graph),
+            node_counts=NODE_COUNTS,
+            class_counts=CLASS_COUNTS,
+            trials=trials,
+            base_seed=seed,
+        )
+    cells = aggregate(results)
+    rows = [
+        {
+            "model": k[0], "capacity_mb": k[1] / 1e6, "nodes": k[2],
+            "classes": k[3], **{m: round(v, 6) for m, v in vals.items()},
+        }
+        for k, vals in cells.items()
+    ]
+
+    # paper claim: best cell vs worst feasible cell per model -> up to ~2x
+    claims = {}
+    for model in PAPER_MODELS:
+        feas = [r for r in rows if r["model"] == model and r["feasible_frac"] > 0.5]
+        if not feas:
+            continue
+        lats = [r["mean_bottleneck_s"] for r in feas]
+        claims[model] = {
+            "worst_s": max(lats), "best_s": min(lats),
+            "improvement_x": max(lats) / min(lats),
+        }
+    payload = {"rows": rows, "claims": claims, "trials": trials}
+    save("fig3", payload)
+    print(table(
+        [dict(model=m, **c) for m, c in claims.items()],
+        ["model", "worst_s", "best_s", "improvement_x"],
+        "Fig.3 sweep: bottleneck-latency improvement (best vs worst cell)",
+    ))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Sec. 4 item 3: sequential (paper) vs joint partition+placement.
+
+The joint search walks the partition-count frontier and re-places each
+candidate; the benchmark quantifies the bottleneck-latency gap it closes."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.joint import joint, sequential
+from repro.core.model_zoo import PAPER_MODELS
+from repro.core.simulate import random_cluster
+
+from benchmarks.common import save, table
+
+
+def run(trials: int = 16, n_nodes: int = 8, capacity_frac: float = 0.3, seed: int = 0) -> dict:
+    rows = []
+    for model, fn in PAPER_MODELS.items():
+        graph = fn()
+        biggest = max(l.param_bytes for l in graph.layers)
+        capacity = max(capacity_frac * graph.total_param_bytes, 1.05 * biggest)
+        gains, seq_lat, joint_lat = [], [], []
+        for t in range(trials):
+            comm = random_cluster(n_nodes, capacity, seed=seed + 613 * t)
+            s = sequential(graph, comm, int(capacity), n_classes=4, seed=t)
+            j = joint(graph, comm, int(capacity), n_classes=4, seed=t)
+            if s.feasible and j.feasible and np.isfinite(s.bottleneck_latency):
+                seq_lat.append(s.bottleneck_latency)
+                joint_lat.append(j.bottleneck_latency)
+                gains.append(s.bottleneck_latency / max(j.bottleneck_latency, 1e-12))
+        if gains:
+            rows.append({
+                "model": model,
+                "seq_mean_s": float(np.mean(seq_lat)),
+                "joint_mean_s": float(np.mean(joint_lat)),
+                "mean_speedup_x": float(np.mean(gains)),
+                "max_speedup_x": float(np.max(gains)),
+                "n": len(gains),
+            })
+    payload = {"rows": rows, "n_nodes": n_nodes, "capacity_frac": capacity_frac}
+    save("joint_opt", payload)
+    print(table(rows, ["model", "seq_mean_s", "joint_mean_s", "mean_speedup_x",
+                       "max_speedup_x", "n"],
+                "Sequential (paper) vs joint partition+placement"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

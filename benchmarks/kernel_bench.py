@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks (CPU wall-time is indicative only; the structural
+numbers -- FLOPs per variant and HBM-traffic model -- are the TPU-relevant
+output and feed the EXPERIMENTS.md kernel table)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quantize.ops import dequantize_int8, quantize_int8
+
+from benchmarks.common import save, table
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> dict:
+    rows = []
+    b, h, kh, hd = 1, 8, 2, 64
+    for s, block in ((1024, 256), (4096, 512)):
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kh, hd), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kh, hd), jnp.float32)
+        flash = jax.jit(lambda q, k, v: flash_attention(q, k, v, block=block))
+        naive = jax.jit(lambda q, k, v: attention_ref(q, k, v))
+        t_f = _time(flash, q, k, v)
+        t_n = _time(naive, q, k, v)
+        # structural numbers (per device, causal):
+        flops = 4 * b * h * hd * (s * s // 2)
+        naive_hbm = b * h * s * s * 4 * 2  # logits + probs materialized
+        flash_hbm = 3 * b * s * h * hd * 4 + b * s * h * hd * 4
+        rows.append({
+            "kernel": "flash_attention", "seq": s,
+            "cpu_ms": t_f * 1e3, "naive_cpu_ms": t_n * 1e3,
+            "gflops": flops / 1e9,
+            "hbm_traffic_ratio_naive/flash": naive_hbm / flash_hbm,
+        })
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 4096), jnp.bfloat16)
+    t_q = _time(lambda x: quantize_int8(x, 256), x)
+    q8, sc = quantize_int8(x, 256)
+    t_d = _time(lambda q, s: dequantize_int8(q, s), q8, sc)
+    rows.append({
+        "kernel": "quantize_int8", "seq": 4096, "cpu_ms": t_q * 1e3,
+        "naive_cpu_ms": t_d * 1e3,
+        "gflops": 0.0,
+        "hbm_traffic_ratio_naive/flash": 2.0 * x.dtype.itemsize / (1 + 4 / 256),
+    })
+    payload = {"rows": rows}
+    save("kernels", payload)
+    print(table(rows, ["kernel", "seq", "cpu_ms", "naive_cpu_ms",
+                       "hbm_traffic_ratio_naive/flash"], "Kernel microbench"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

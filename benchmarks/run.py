@@ -1,0 +1,58 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="fewer trials")
+    ap.add_argument("--only", default=None, help="run a single benchmark")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        algo_scaling,
+        approx_ratio,
+        fig3_bottleneck,
+        joint_opt,
+        kernel_bench,
+        throughput_scaling,
+    )
+
+    trials_fig3 = 4 if args.fast else 12
+    trials = 6 if args.fast else 16
+    benches = {
+        "fig3": lambda: fig3_bottleneck.run(trials=trials_fig3),
+        "throughput": lambda: throughput_scaling.run(trials=trials),
+        "approx_ratio": lambda: approx_ratio.run(trials=max(trials, 8)),
+        "joint_opt": lambda: joint_opt.run(trials=trials),
+        "algo_scaling": algo_scaling.run,
+        "kernels": kernel_bench.run,
+    }
+    failures = []
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n### {name} ###", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # pragma: no cover
+            failures.append((name, repr(e)))
+            print(f"[{name}] FAILED: {e!r}", flush=True)
+    if failures:
+        print("\nFAILURES:", failures)
+        return 1
+    print("\nall benchmarks complete; results under results/bench_*.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

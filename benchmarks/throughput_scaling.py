@@ -1,0 +1,65 @@
+"""The paper's headline claim: "improve the inference pipeline throughput by
+200% by utilizing sufficient numbers of resource-constrained nodes."
+
+Throughput (1/bottleneck) vs number of nodes, at fixed (small) node
+capacity, relative to the minimum-viable cluster.  Also reports the random-
+and greedy-placement baselines to isolate the algorithm's contribution.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.model_zoo import PAPER_MODELS
+from repro.core.simulate import run_trial
+from repro.core.placement import place_greedy, place_random
+
+from benchmarks.common import save, table
+
+
+def run(trials: int = 16, capacity_frac: float = 0.25, seed: int = 0) -> dict:
+    node_counts = [3, 4, 6, 8, 10, 12]
+    rows = []
+    for model, fn in PAPER_MODELS.items():
+        graph = fn()
+        biggest = max(l.param_bytes for l in graph.layers)
+        capacity = max(capacity_frac * graph.total_param_bytes, 1.05 * biggest)
+        base_tp = None
+        for n in node_counts:
+            tps, tps_greedy, tps_rand = [], [], []
+            for t in range(trials):
+                r = run_trial(graph, capacity, n, 8, seed + 31 * t)
+                if r.feasible:
+                    tps.append(r.throughput)
+                rg = run_trial(graph, capacity, n, 4, seed + 31 * t, placer=place_greedy)
+                if rg.feasible:
+                    tps_greedy.append(rg.throughput)
+                rr = run_trial(graph, capacity, n, 4, seed + 31 * t, placer=place_random)
+                if rr.feasible:
+                    tps_rand.append(rr.throughput)
+            if not tps:
+                continue
+            tp = float(np.mean(tps))
+            if base_tp is None:
+                base_tp = tp
+            rows.append({
+                "model": model, "nodes": n,
+                "throughput": tp,
+                "gain_pct": 100.0 * (tp / base_tp - 1.0),
+                "vs_greedy_x": tp / float(np.mean(tps_greedy)) if tps_greedy else float("nan"),
+                "vs_random_x": tp / float(np.mean(tps_rand)) if tps_rand else float("nan"),
+            })
+    claims = {}
+    for model in PAPER_MODELS:
+        gains = [r["gain_pct"] for r in rows if r["model"] == model]
+        if gains:
+            claims[model] = {"max_gain_pct": max(gains)}
+    payload = {"rows": rows, "claims": claims, "capacity_frac": capacity_frac, "trials": trials}
+    save("throughput_scaling", payload)
+    print(table(rows, ["model", "nodes", "throughput", "gain_pct", "vs_greedy_x", "vs_random_x"],
+                "Throughput vs cluster size (paper: up to +200%)"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""SEIFER pipeline over (simulated) pods: GPipe + placement + int8 boundaries.
+
+Must set the device-count flag BEFORE importing jax, so run as a script:
+
+    PYTHONPATH=src python examples/pipeline_pods.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.graph import chain  # noqa: E402
+from repro.runtime.pipeline import (  # noqa: E402
+    make_gpipe,
+    plan_pipeline,
+    reorder_stage_params,
+)
+
+mesh = jax.make_mesh((4,), ("stage",))
+D, LAYERS, N_MICRO = 64, 8, 8
+
+ws = jax.random.normal(jax.random.PRNGKey(0), (LAYERS, D, D), jnp.float32) * 0.1
+stage_ws = ws.reshape(4, 2, D, D)
+
+
+def stage_fn(local_w, x):
+    for i in range(2):
+        x = jnp.tanh(x @ local_w[i])
+    return x
+
+
+# pods with heterogeneous DCN links: SEIFER places the chain on the fastest
+graph = chain("mlp8", [(D * D * 4, 32 * D * 4)] * LAYERS)
+pod_bw = np.array(
+    [[0, 12e9, 2e9, 2e9], [12e9, 0, 6e9, 2e9],
+     [2e9, 6e9, 0, 3e9], [2e9, 2e9, 3e9, 0]], float)
+plan = plan_pipeline(graph, 4, stage_capacity=2 * D * D * 4, pod_bw=pod_bw)
+print(f"SEIFER cuts: {plan.cuts}; stage->pod order: {plan.stage_order}; "
+      f"est bottleneck {plan.est_bottleneck_s*1e6:.2f} us")
+
+x = jax.random.normal(jax.random.PRNGKey(1), (N_MICRO, 32, D), jnp.float32)
+ref = x
+for i in range(LAYERS):
+    ref = jnp.tanh(ref @ ws[i])
+
+for compress in (False, True):
+    pipe = make_gpipe(stage_fn, mesh, axis="stage", n_micro=N_MICRO,
+                      compress=compress, quant_block=64,
+                      stage_order=plan.stage_order)
+    with mesh:
+        y = pipe(reorder_stage_params(stage_ws, plan), x)
+    err = float(jnp.max(jnp.abs(y - ref)))
+    label = "int8-compressed boundaries" if compress else "bf16 boundaries"
+    print(f"{label}: max |err| vs sequential = {err:.5f}")
+print("pipeline example complete.")

@@ -1,0 +1,41 @@
+"""Quickstart: partition a DNN and place it on a simulated edge cluster.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import evaluate_pipeline, partition_min_bottleneck, place_color_coding
+from repro.core.model_zoo import resnet50
+from repro.core.simulate import random_cluster
+
+# 1. the model, as a layer graph (params bytes / activation bytes / flops)
+graph = resnet50()
+print(f"model: {graph.name}, {len(graph)} layers, "
+      f"{graph.total_param_bytes/1e6:.1f} MB int8 weights")
+
+# 2. a cluster: 8 edge nodes + dispatcher, WiFi bandwidths from positions
+capacity = graph.total_param_bytes / 3  # each node holds ~1/3 of the model
+comm = random_cluster(n_nodes=8, capacity_bytes=capacity, seed=0)
+
+# 3. SEIFER step 1 -- partition: min-bottleneck cuts under node memory
+part = partition_min_bottleneck(graph, int(capacity))
+print(f"partitions: {part.n_parts}, cuts at {part.cuts}, "
+      f"max boundary {part.max_cut_bytes/1e6:.2f} MB")
+
+# 4. SEIFER step 2 -- placement: heaviest boundaries on fastest links
+place = place_color_coding(
+    part.boundaries, [p.param_bytes for p in part.partitions], comm,
+    n_classes=4, dispatcher=0, in_bytes=graph.in_bytes,
+)
+print(f"placement: nodes {place.path}, "
+      f"bottleneck {place.bottleneck_latency*1e3:.2f} ms, "
+      f"throughput {place.throughput:.1f} inf/s")
+
+# 5. end-to-end metrics, with and without boundary compression (ZFP/LZ4
+#    on the edge; blockwise int8 on TPU -- see kernels/quantize)
+for ratio in (1.0, 2.0):
+    m = evaluate_pipeline(part.partitions, place.path, comm,
+                          device_flops=5e9, compression_ratio=ratio)
+    print(f"compression {ratio:.0f}x: period {m.pipeline_period*1e3:.2f} ms, "
+          f"effective throughput {m.effective_throughput:.1f} inf/s")

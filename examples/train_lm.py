@@ -1,0 +1,67 @@
+"""Train a small LM end-to-end: synthetic data pipeline, AdamW, grad clip,
+checkpoint/restore mid-run (fault-tolerance path exercised for real).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 60]
+"""
+
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduced
+from repro.models import lm
+from repro.runtime import train as train_lib
+from repro.runtime.checkpoint import Checkpointer
+
+
+def data_stream(vocab: int, batch: int, seq: int, seed: int = 0):
+    """Synthetic Zipf-ish token stream with induced bigram structure."""
+    key = jax.random.PRNGKey(seed)
+    bigram = jax.random.randint(jax.random.PRNGKey(7), (vocab,), 0, vocab)
+    while True:
+        key, k1 = jax.random.split(key)
+        first = jax.random.categorical(
+            k1, -jnp.log1p(jnp.arange(vocab, dtype=jnp.float32)), shape=(batch, 1)
+        )
+        rows = [first]
+        for _ in range(seq - 1):
+            rows.append(bigram[rows[-1]])  # deterministic bigram: learnable
+        yield {"tokens": jnp.concatenate(rows, axis=1).astype(jnp.int32)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = reduced(ARCHS["llama3.2-1b"], layers=4, d_model=256, vocab=2048)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), max_pos=args.seq)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"training {cfg.name} (reduced, {n_params/1e6:.1f}M params)")
+
+    state = train_lib.init_state(cfg, params)
+    opt = train_lib.OptConfig(lr=3e-3, warmup_steps=10)
+    step_fn = jax.jit(train_lib.make_train_step(cfg, opt))
+    ckpt = Checkpointer(tempfile.mkdtemp(prefix="ckpt-"))
+    stream = data_stream(cfg.vocab_size, args.batch, args.seq)
+
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        state, metrics = step_fn(state, next(stream))
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+        if i == args.steps // 2:
+            ckpt.save(i, state)  # mid-run checkpoint
+            _, state = ckpt.restore(state)  # ...and prove restore works
+            print(f"checkpoint saved+restored at step {i}")
+    print(f"done in {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

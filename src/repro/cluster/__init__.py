@@ -1,0 +1,14 @@
+from repro.cluster.dispatcher import Dispatcher
+from repro.cluster.lifecycle import EdgeCluster, InferencePipeline, Node, Pod
+from repro.cluster.store import ArtifactStore
+from repro.cluster.watch import ModelWatcher
+
+__all__ = [
+    "ArtifactStore",
+    "Dispatcher",
+    "EdgeCluster",
+    "InferencePipeline",
+    "ModelWatcher",
+    "Node",
+    "Pod",
+]

@@ -1,0 +1,179 @@
+"""Dispatcher: leader election, bandwidth probing, configure + deploy.
+
+The SEIFER system-initialization and configuration steps (Sec. 2.1-2.2):
+
+  1. leader election -- lowest-id healthy node wins (bully-style),
+  2. IPerf jobs -- pairwise bandwidth probes, leader-directed; measurements
+     are the true link bandwidth with multiplicative log-normal noise,
+  3. partitioning + placement containers -- run the core algorithms on the
+     PROBED bandwidths, store partition artifacts + the plan,
+  4. deploy -- one pod per partition, wired in a chain,
+  5. node-failure recovery -- re-place on the degraded graph and restart
+     crashed pods from the store.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.cluster.lifecycle import EdgeCluster, InferencePipeline, Pod
+from repro.cluster.store import ArtifactStore
+from repro.core.graph import LayerGraph
+from repro.core.partitioner import PartitionResult, partition_min_bottleneck
+from repro.core.placement import CommGraph, PlacementResult, place_color_coding
+
+
+@dataclasses.dataclass
+class DeploymentPlan:
+    version: int
+    partition: PartitionResult
+    placement: PlacementResult
+
+    @property
+    def feasible(self) -> bool:
+        return self.partition.feasible and self.placement.feasible
+
+
+class Dispatcher:
+    def __init__(
+        self,
+        cluster: EdgeCluster,
+        store: ArtifactStore,
+        *,
+        n_classes: int | None = 4,
+        probe_noise: float = 0.05,
+        seed: int = 0,
+    ):
+        self.cluster = cluster
+        self.store = store
+        self.n_classes = n_classes
+        self.probe_noise = probe_noise
+        self.rng = np.random.default_rng(seed)
+        self.leader: int | None = None
+        self.probed: CommGraph | None = None
+
+    # -- Sec 2.1: system initialization --------------------------------------
+    def elect_leader(self) -> int:
+        healthy = self.cluster.healthy_ids()
+        if not healthy:
+            raise RuntimeError("no healthy nodes")
+        self.leader = min(healthy)
+        return self.leader
+
+    def probe_bandwidths(self) -> CommGraph:
+        """IPerf-analogue: noisy symmetric measurements of live links."""
+        true = self.cluster.degraded_comm()
+        n = true.n
+        noise = self.rng.lognormal(0.0, self.probe_noise, size=(n, n))
+        noise = np.tril(noise) + np.tril(noise, -1).T  # symmetric
+        bw = true.bw * noise
+        self.probed = CommGraph(bw=bw, node_capacity=true.node_capacity)
+        return self.probed
+
+    # -- Sec 2.2: configuration step -----------------------------------------
+    def configure(
+        self,
+        graph: LayerGraph,
+        version: int,
+        *,
+        capacity: float | None = None,
+        include_dispatcher: bool = True,
+    ) -> DeploymentPlan:
+        if self.leader is None:
+            self.elect_leader()
+        comm = self.probed if self.probed is not None else self.probe_bandwidths()
+        cap = capacity if capacity is not None else float(np.max(comm.node_capacity))
+        part = partition_min_bottleneck(graph, int(cap), max_parts=len(self.cluster.healthy_ids()))
+        if not part.feasible:
+            return DeploymentPlan(version, part, PlacementResult(False, (), float("inf"), "n/a"))
+        place = place_color_coding(
+            part.boundaries,
+            [p.param_bytes for p in part.partitions],
+            comm,
+            n_classes=self.n_classes,
+            seed=int(self.rng.integers(1 << 31)),
+            in_bytes=graph.in_bytes if include_dispatcher else 0.0,
+            out_bytes=graph.layers[-1].out_bytes if include_dispatcher else 0.0,
+            dispatcher=self.leader if include_dispatcher else None,
+        )
+        plan = DeploymentPlan(version, part, place)
+        if plan.feasible:
+            self.store.put_json(
+                version,
+                "plan",
+                {
+                    "cuts": list(part.cuts),
+                    "path": list(place.path),
+                    "bottleneck_latency": place.bottleneck_latency,
+                    "algorithm": place.algorithm,
+                },
+            )
+        return plan
+
+    def deploy(
+        self,
+        plan: DeploymentPlan,
+        executor: Callable,
+        *,
+        compression_ratio: float = 1.0,
+    ) -> InferencePipeline:
+        if not plan.feasible:
+            raise RuntimeError("cannot deploy infeasible plan")
+        pods = [
+            Pod(f"inf-{plan.version}-{i}", node, part, plan.version)
+            for i, (node, part) in enumerate(zip(plan.placement.path, plan.partition.partitions))
+        ]
+        return InferencePipeline(
+            self.cluster,
+            pods,
+            executor,
+            boundary_bytes=list(plan.partition.boundaries),
+            compression_ratio=compression_ratio,
+        )
+
+    # -- fault tolerance -------------------------------------------------------
+    def recover(
+        self,
+        pipeline: InferencePipeline,
+        graph: LayerGraph,
+        version: int,
+        *,
+        capacity: float | None = None,
+    ) -> InferencePipeline:
+        """Re-place on the degraded cluster; restart dead pods from the store.
+
+        The paper reschedules pods onto healthy nodes; partitions are reused
+        (their files live on NFS), only the placement is re-solved.
+        """
+        if self.leader is not None and not self.cluster.nodes[self.leader].healthy:
+            self.elect_leader()  # leader itself died -> re-elect
+        self.probe_bandwidths()
+        comm = self.probed
+        part = pipeline_partition(pipeline)
+        place = place_color_coding(
+            pipeline.boundary_bytes,
+            [p.param_bytes for p in part],
+            comm,
+            n_classes=self.n_classes,
+            seed=int(self.rng.integers(1 << 31)),
+        )
+        if not place.feasible:
+            # partitions no longer fit the surviving nodes: full reconfigure
+            plan = self.configure(graph, version, capacity=capacity)
+            if not plan.feasible:
+                raise RuntimeError("cluster too degraded to host the model")
+            return self.deploy(plan, pipeline.executor,
+                               compression_ratio=pipeline.compression_ratio)
+        for pod, node in zip(pipeline.pods, place.path):
+            if not pod.alive or not self.cluster.nodes[pod.node_id].healthy:
+                pod.restart_on(node)
+            else:
+                pod.node_id = node
+        return pipeline
+
+
+def pipeline_partition(pipeline: InferencePipeline) -> Sequence:
+    return [p.partition for p in pipeline.pods]

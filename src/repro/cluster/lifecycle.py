@@ -1,0 +1,157 @@
+"""Cluster + pod lifecycle simulation (the microK8s layer, in-process).
+
+``EdgeCluster`` holds nodes and the true link bandwidths; ``Pod``s host one
+partition each and forward intermediate activations to the next pod --
+latency is simulated from bytes / bandwidth (the paper's FIFO+TCP transport)
+with optional boundary int8 compression (the ZFP/LZ4 analogue).  Node
+failures mark pods dead; the dispatcher reschedules onto healthy nodes and
+pods re-instantiate their partition from the artifact store, exactly the
+SEIFER recovery path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core.graph import Partition
+from repro.core.placement import CommGraph
+
+
+@dataclasses.dataclass
+class Node:
+    node_id: int
+    capacity_bytes: float
+    flops_per_s: float = 0.0
+    healthy: bool = True
+
+
+class EdgeCluster:
+    """Nodes + symmetric link bandwidths; node 0 is the dispatcher host."""
+
+    def __init__(self, comm: CommGraph, flops_per_s: float = 0.0):
+        self.comm = comm
+        self.nodes = [
+            Node(i, comm.node_capacity[i], flops_per_s) for i in range(comm.n)
+        ]
+
+    @property
+    def n(self) -> int:
+        return len(self.nodes)
+
+    def healthy_ids(self) -> list[int]:
+        return [n.node_id for n in self.nodes if n.healthy]
+
+    def fail(self, node_id: int) -> None:
+        self.nodes[node_id].healthy = False
+
+    def heal(self, node_id: int) -> None:
+        self.nodes[node_id].healthy = True
+
+    def degraded_comm(self) -> CommGraph:
+        """CommGraph with failed nodes' capacity zeroed and links cut."""
+        bw = self.comm.bw.copy()
+        cap = self.comm.node_capacity.copy()
+        for node in self.nodes:
+            if not node.healthy:
+                bw[node.node_id, :] = 0.0
+                bw[:, node.node_id] = 0.0
+                cap[node.node_id] = 0.0
+        return CommGraph(bw=bw, node_capacity=cap)
+
+    def true_bandwidth(self, a: int, b: int) -> float:
+        return float(self.comm.bw[a, b])
+
+
+@dataclasses.dataclass
+class Pod:
+    """One inference pod: runtime container + IO container, simulated."""
+
+    pod_id: str
+    node_id: int
+    partition: Partition
+    version: int
+    restarts: int = 0
+    alive: bool = True
+
+    def restart_on(self, node_id: int) -> None:
+        self.node_id = node_id
+        self.restarts += 1
+        self.alive = True
+
+
+ExecutorFn = Callable[[int, int, Any], Any]  # (start_layer, stop_layer, x) -> y
+
+
+@dataclasses.dataclass
+class StepTrace:
+    compute_s: list[float]
+    link_s: list[float]
+
+    @property
+    def bottleneck_s(self) -> float:
+        return max(self.link_s, default=0.0)
+
+    @property
+    def period_s(self) -> float:
+        return max(self.compute_s + self.link_s, default=0.0)
+
+    @property
+    def e2e_s(self) -> float:
+        return sum(self.compute_s) + sum(self.link_s)
+
+
+class InferencePipeline:
+    """Chain of pods executing a partitioned model over simulated links."""
+
+    def __init__(
+        self,
+        cluster: EdgeCluster,
+        pods: Sequence[Pod],
+        executor: ExecutorFn,
+        boundary_bytes: Sequence[float],
+        compression_ratio: float = 1.0,
+    ):
+        self.cluster = cluster
+        self.pods = list(pods)
+        self.executor = executor
+        self.boundary_bytes = list(boundary_bytes)
+        self.compression_ratio = compression_ratio
+
+    def path(self) -> list[int]:
+        return [p.node_id for p in self.pods]
+
+    def healthy(self) -> bool:
+        return all(
+            p.alive and self.cluster.nodes[p.node_id].healthy for p in self.pods
+        )
+
+    def run(self, x: Any) -> tuple[Any, StepTrace]:
+        """One inference through the chain; raises if a pod is dead."""
+        if not self.healthy():
+            raise RuntimeError("pipeline degraded: dead pod or failed node")
+        compute_s, link_s = [], []
+        for idx, pod in enumerate(self.pods):
+            x = self.executor(pod.partition.start, pod.partition.stop, x)
+            node = self.cluster.nodes[pod.node_id]
+            compute_s.append(
+                pod.partition.flops / node.flops_per_s if node.flops_per_s else 0.0
+            )
+            if idx < len(self.pods) - 1:
+                bw = self.cluster.true_bandwidth(
+                    pod.node_id, self.pods[idx + 1].node_id
+                )
+                bytes_ = self.boundary_bytes[idx] / self.compression_ratio
+                link_s.append(float("inf") if bw <= 0 else bytes_ / bw)
+        return x, StepTrace(compute_s, link_s)
+
+    def mark_node_failed(self, node_id: int) -> list[Pod]:
+        """k8s node-down event: pods on the node become dead."""
+        dead = []
+        for p in self.pods:
+            if p.node_id == node_id:
+                p.alive = False
+                dead.append(p)
+        return dead

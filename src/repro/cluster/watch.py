@@ -1,0 +1,47 @@
+"""Model-watch container: redeploy on model-version updates (Sec. 2.3-3).
+
+Watches the artifact store's version pointer; when the external repository
+publishes a new model version, the watcher stops the inference pods and
+reruns partitioning/placement + deployment.  A full cluster restart is only
+needed when a NODE is added (per the paper) -- version bumps are handled
+in-place.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.cluster.dispatcher import Dispatcher
+from repro.cluster.lifecycle import InferencePipeline
+from repro.cluster.store import ArtifactStore
+from repro.core.graph import LayerGraph
+
+
+class ModelWatcher:
+    def __init__(
+        self,
+        store: ArtifactStore,
+        dispatcher: Dispatcher,
+        graph_for_version: Callable[[int], LayerGraph],
+    ):
+        self.store = store
+        self.dispatcher = dispatcher
+        self.graph_for_version = graph_for_version
+        self.deployed_version = store.current_version()
+
+    def poll(
+        self, pipeline: InferencePipeline, executor: Callable, **deploy_kw
+    ) -> InferencePipeline:
+        """One watch tick: redeploy if the store moved past us."""
+        latest = self.store.current_version()
+        if latest <= self.deployed_version:
+            return pipeline
+        for pod in pipeline.pods:  # stop the old inference pods
+            pod.alive = False
+        graph = self.graph_for_version(latest)
+        plan = self.dispatcher.configure(graph, latest)
+        if not plan.feasible:
+            raise RuntimeError(f"version {latest} does not fit the cluster")
+        new_pipe = self.dispatcher.deploy(plan, executor, **deploy_kw)
+        self.deployed_version = latest
+        return new_pipe

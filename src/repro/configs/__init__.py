@@ -1,0 +1,13 @@
+from repro.configs.archs import ALIASES, ARCHS, get_config
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, reduced, shape_cells
+
+__all__ = [
+    "ALIASES",
+    "ARCHS",
+    "get_config",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "reduced",
+    "shape_cells",
+]

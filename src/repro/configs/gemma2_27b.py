@@ -1,0 +1,4 @@
+"""--arch config module (see archs.py for the definition)."""
+from repro.configs.archs import GEMMA2_27B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""--arch config module (see archs.py for the definition)."""
+from repro.configs.archs import GEMMA_2B as CONFIG
+
+__all__ = ["CONFIG"]

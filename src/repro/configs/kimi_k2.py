@@ -1,0 +1,4 @@
+"""--arch config module (see archs.py for the definition)."""
+from repro.configs.archs import KIMI_K2 as CONFIG
+
+__all__ = ["CONFIG"]

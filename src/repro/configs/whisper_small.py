@@ -1,0 +1,4 @@
+"""--arch config module (see archs.py for the definition)."""
+from repro.configs.archs import WHISPER_SMALL as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,59 @@
+"""SEIFER core: DNN partitioning + placement for max-throughput inference."""
+
+from repro.core.bottleneck import PipelineMetrics, evaluate_pipeline, link_latencies
+from repro.core.graph import (
+    Layer,
+    LayerGraph,
+    Partition,
+    boundary_bytes,
+    chain,
+    make_partitions,
+)
+from repro.core.joint import JointResult, joint, sequential
+from repro.core.partitioner import (
+    PartitionResult,
+    partition_exact_k,
+    partition_exhaustive,
+    partition_min_bottleneck,
+    partition_min_sum,
+    partition_paper_greedy,
+)
+from repro.core.placement import (
+    CommGraph,
+    PlacementResult,
+    place_brute_force,
+    place_color_coding,
+    place_greedy,
+    place_optimal,
+    place_random,
+    quantize_bandwidths,
+)
+
+__all__ = [
+    "Layer",
+    "LayerGraph",
+    "Partition",
+    "boundary_bytes",
+    "chain",
+    "make_partitions",
+    "PartitionResult",
+    "partition_exact_k",
+    "partition_exhaustive",
+    "partition_min_bottleneck",
+    "partition_min_sum",
+    "partition_paper_greedy",
+    "CommGraph",
+    "PlacementResult",
+    "place_brute_force",
+    "place_color_coding",
+    "place_greedy",
+    "place_optimal",
+    "place_random",
+    "quantize_bandwidths",
+    "PipelineMetrics",
+    "evaluate_pipeline",
+    "link_latencies",
+    "JointResult",
+    "joint",
+    "sequential",
+]

@@ -1,0 +1,80 @@
+"""Bottleneck-latency / throughput metrics (SEIFER Sec. 2.2-1a).
+
+Latency of a link = bytes transferred / bandwidth.  The *bottleneck latency*
+of an inference pipeline is the maximum link latency; pipeline throughput is
+its reciprocal.  The extended metric additionally accounts for per-stage
+compute time (used when mapping placements onto TPU pods, where stage compute
+can dominate the link): steady-state pipeline period = max over all stage
+compute times and link latencies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.graph import Partition
+from repro.core.placement import CommGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineMetrics:
+    bottleneck_latency: float  # s, max link latency (paper metric)
+    pipeline_period: float  # s, max(link latency, stage compute) (extended)
+    end_to_end_latency: float  # s, sum of stage compute + link latencies
+    throughput: float  # 1 / bottleneck_latency (paper)
+    effective_throughput: float  # 1 / pipeline_period (extended)
+
+
+def link_latencies(
+    boundaries: Sequence[float], path: Sequence[int], comm: CommGraph
+) -> list[float]:
+    out = []
+    for i, w in enumerate(boundaries):
+        b = comm.bw[path[i], path[i + 1]]
+        out.append(float("inf") if b <= 0 else w / b)
+    return out
+
+
+def evaluate_pipeline(
+    partitions: Sequence[Partition],
+    path: Sequence[int],
+    comm: CommGraph,
+    device_flops: float | Sequence[float] | None = None,
+    in_bytes: float = 0.0,
+    dispatcher: int | None = None,
+    compression_ratio: float = 1.0,
+) -> PipelineMetrics:
+    """Score a (partition, placement) pair.
+
+    ``compression_ratio`` models boundary compression (paper: ZFP/LZ4; ours:
+    blockwise int8): transferred bytes are divided by it.
+    """
+    if len(path) != len(partitions):
+        raise ValueError("path length != number of partitions")
+    boundaries = [p.out_bytes / compression_ratio for p in partitions[:-1]]
+    lats = link_latencies(boundaries, path, comm)
+    if dispatcher is not None and in_bytes > 0 and len(path) > 0:
+        b = comm.bw[dispatcher, path[0]]
+        lats = [float("inf") if b <= 0 else (in_bytes / compression_ratio) / b] + lats
+    bottleneck = max(lats, default=0.0)
+    if device_flops is None:
+        compute = [0.0] * len(partitions)
+    else:
+        flops = (
+            [float(device_flops)] * len(partitions)
+            if np.isscalar(device_flops)
+            else [float(device_flops[node]) for node in path]
+        )
+        compute = [p.flops / f if f > 0 else float("inf") for p, f in zip(partitions, flops)]
+    period = max([bottleneck] + compute)
+    e2e = sum(compute) + sum(l for l in lats if np.isfinite(l))
+    return PipelineMetrics(
+        bottleneck_latency=float(bottleneck),
+        pipeline_period=float(period),
+        end_to_end_latency=float(e2e),
+        throughput=0.0 if bottleneck == float("inf") else (float("inf") if bottleneck == 0 else 1.0 / bottleneck),
+        effective_throughput=0.0 if period == float("inf") else (float("inf") if period == 0 else 1.0 / period),
+    )

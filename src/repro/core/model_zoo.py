@@ -1,0 +1,162 @@
+"""Layer graphs of the CNNs used in the paper-style evaluation.
+
+SEIFER's preliminary evaluation (Fig. 3) sweeps several Keras-style vision
+models (the DEFER predecessor used VGG16/ResNet-family models).  We
+reconstruct their chain layer graphs from the published architectures:
+per-layer parameter counts and output activation shapes.  Parameters default
+to 1 byte each (the paper quantizes models with TFLite before deployment);
+activations default to 4 bytes (float), with an optional compression ratio
+applied by the caller (paper: ZFP/LZ4).
+
+These graphs feed ``core.simulate`` and the Fig. 3 / throughput benchmarks.
+The assigned LM architectures export their own graphs via
+``models/graph_export.py``.
+"""
+
+from __future__ import annotations
+
+from repro.core.graph import Layer, LayerGraph
+
+PARAM_BYTES = 1  # int8-quantized weights (TFLite), per the paper
+ACT_BYTES = 4  # float32 activations on the wire
+
+
+def _conv(name: str, k: int, cin: int, cout: int, oh: int, ow: int) -> Layer:
+    return Layer(
+        name=name,
+        param_bytes=(k * k * cin * cout + cout) * PARAM_BYTES,
+        out_bytes=oh * ow * cout * ACT_BYTES,
+        flops=2 * k * k * cin * cout * oh * ow,
+    )
+
+
+def _fc(name: str, cin: int, cout: int) -> Layer:
+    return Layer(
+        name=name,
+        param_bytes=(cin * cout + cout) * PARAM_BYTES,
+        out_bytes=cout * ACT_BYTES,
+        flops=2 * cin * cout,
+    )
+
+
+def vgg16() -> LayerGraph:
+    """VGG16 (224x224x3).  Pooling folded into the preceding conv's output."""
+    cfg = [
+        # (cin, cout, out_h/w after optional pool)
+        (3, 64, 224),
+        (64, 64, 112),  # pool
+        (64, 128, 112),
+        (128, 128, 56),  # pool
+        (128, 256, 56),
+        (256, 256, 56),
+        (256, 256, 28),  # pool
+        (256, 512, 28),
+        (512, 512, 28),
+        (512, 512, 14),  # pool
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 7),  # pool
+    ]
+    layers = [
+        _conv(f"conv{i}", 3, cin, cout, hw, hw) for i, (cin, cout, hw) in enumerate(cfg)
+    ]
+    layers += [_fc("fc1", 7 * 7 * 512, 4096), _fc("fc2", 4096, 4096), _fc("fc3", 4096, 1000)]
+    return LayerGraph("vgg16", tuple(layers), in_bytes=224 * 224 * 3 * ACT_BYTES)
+
+
+def _bottleneck(name: str, cin: int, cmid: int, cout: int, hw: int, downsample: bool) -> Layer:
+    params = cin * cmid + 9 * cmid * cmid + cmid * cout + (cin * cout if downsample else 0)
+    flops = 2 * hw * hw * (cin * cmid + 9 * cmid * cmid + cmid * cout)
+    return Layer(
+        name=name,
+        param_bytes=params * PARAM_BYTES,
+        out_bytes=hw * hw * cout * ACT_BYTES,
+        flops=flops,
+    )
+
+
+def resnet50() -> LayerGraph:
+    layers = [_conv("stem", 7, 3, 64, 112, 112)]
+    stages = [  # (blocks, cin, cmid, cout, hw)
+        (3, 64, 64, 256, 56),
+        (4, 256, 128, 512, 28),
+        (6, 512, 256, 1024, 14),
+        (3, 1024, 512, 2048, 7),
+    ]
+    for s, (nblk, cin, cmid, cout, hw) in enumerate(stages):
+        for b in range(nblk):
+            layers.append(
+                _bottleneck(f"s{s}b{b}", cin if b == 0 else cout, cmid, cout, hw, b == 0)
+            )
+    layers.append(_fc("fc", 2048, 1000))
+    return LayerGraph("resnet50", tuple(layers), in_bytes=224 * 224 * 3 * ACT_BYTES)
+
+
+def inceptionv3() -> LayerGraph:
+    """Stage-level InceptionV3 chain (299x299x3): published block output
+    shapes; per-block params distributed to match the ~23.8M total."""
+    blocks = [  # (name, params, out_h/w, out_c)
+        ("stem1", 0.03e6, 147, 32),
+        ("stem2", 0.1e6, 147, 64),
+        ("stem3", 0.3e6, 71, 192),
+        ("mixed0", 0.26e6, 35, 256),
+        ("mixed1", 0.28e6, 35, 288),
+        ("mixed2", 0.29e6, 35, 288),
+        ("mixed3", 1.2e6, 17, 768),
+        ("mixed4", 1.3e6, 17, 768),
+        ("mixed5", 1.4e6, 17, 768),
+        ("mixed6", 1.4e6, 17, 768),
+        ("mixed7", 1.6e6, 17, 768),
+        ("mixed8", 1.7e6, 8, 1280),
+        ("mixed9", 5.0e6, 8, 2048),
+        ("mixed10", 6.1e6, 8, 2048),
+    ]
+    layers = [
+        Layer(
+            name=n,
+            param_bytes=int(p) * PARAM_BYTES,
+            out_bytes=hw * hw * c * ACT_BYTES,
+            flops=int(p) * 2 * hw * hw,
+        )
+        for (n, p, hw, c) in blocks
+    ]
+    layers.append(_fc("fc", 2048, 1000))
+    return LayerGraph("inceptionv3", tuple(layers), in_bytes=299 * 299 * 3 * ACT_BYTES)
+
+
+def _inverted_residual(name: str, cin: int, cout: int, hw: int, expand: int = 6) -> Layer:
+    cexp = cin * expand
+    params = cin * cexp + 9 * cexp + cexp * cout
+    return Layer(
+        name=name,
+        param_bytes=params * PARAM_BYTES,
+        out_bytes=hw * hw * cout * ACT_BYTES,
+        flops=2 * hw * hw * params,
+    )
+
+
+def mobilenetv2() -> LayerGraph:
+    layers = [_conv("stem", 3, 3, 32, 112, 112)]
+    cfg = [  # (cin, cout, hw, repeats)
+        (32, 16, 112, 1),
+        (16, 24, 56, 2),
+        (24, 32, 28, 3),
+        (32, 64, 14, 4),
+        (64, 96, 14, 3),
+        (96, 160, 7, 3),
+        (160, 320, 7, 1),
+    ]
+    for i, (cin, cout, hw, rep) in enumerate(cfg):
+        for r in range(rep):
+            layers.append(_inverted_residual(f"ir{i}_{r}", cin if r == 0 else cout, cout, hw))
+    layers.append(_conv("head", 1, 320, 1280, 7, 7))
+    layers.append(_fc("fc", 1280, 1000))
+    return LayerGraph("mobilenetv2", tuple(layers), in_bytes=224 * 224 * 3 * ACT_BYTES)
+
+
+PAPER_MODELS = {
+    "vgg16": vgg16,
+    "resnet50": resnet50,
+    "inceptionv3": inceptionv3,
+    "mobilenetv2": mobilenetv2,
+}

@@ -1,0 +1,487 @@
+"""Partition placement on a communication graph (SEIFER Sec. 2.2-1c).
+
+"Place the partitions such that the ones which transfer the most data are
+placed on the highest bandwidth edges in the communication graph."
+
+Formally: given k partitions with boundary weights w_0..w_{k-2} (bytes) and a
+node graph with link bandwidths, find an injective node path p_0..p_{k-1}
+minimizing  max_i  w_i / bw(p_i, p_{i+1}),  subject to node capacities.
+This is a minimum-bottleneck k-path problem (NP-hard in general); per the
+paper's acknowledgements we use the Alon-Yuster-Zwick *color-coding* k-path
+algorithm on a *bandwidth-class*-quantized graph, with binary search over the
+finite set of candidate bottleneck latencies.  For small clusters an exact
+subset-DP is used (and doubles as the oracle in tests / the approximation-
+ratio benchmark).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import numpy as np
+
+EXACT_NODE_LIMIT = 16  # subset DP up to 2^16 states (vectorized per level)
+
+
+# ---------------------------------------------------------------------------
+# Communication graph
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CommGraph:
+    """Symmetric link-bandwidth matrix (bytes/s; 0 = no link) + capacities."""
+
+    bw: np.ndarray  # (n, n) float
+    node_capacity: np.ndarray  # (n,) float bytes
+
+    def __post_init__(self) -> None:
+        bw = np.asarray(self.bw, dtype=float)
+        if bw.ndim != 2 or bw.shape[0] != bw.shape[1]:
+            raise ValueError("bw must be square")
+        if not np.allclose(bw, bw.T):
+            raise ValueError("bw must be symmetric")
+        if np.any(bw < 0):
+            raise ValueError("bw must be nonnegative")
+        object.__setattr__(self, "bw", bw)
+        cap = np.asarray(self.node_capacity, dtype=float)
+        if cap.shape != (bw.shape[0],):
+            raise ValueError("node_capacity shape mismatch")
+        object.__setattr__(self, "node_capacity", cap)
+
+    @property
+    def n(self) -> int:
+        return self.bw.shape[0]
+
+    @staticmethod
+    def uniform(bw: np.ndarray, capacity: float) -> "CommGraph":
+        n = np.asarray(bw).shape[0]
+        return CommGraph(bw=np.asarray(bw, float), node_capacity=np.full(n, float(capacity)))
+
+
+def quantize_bandwidths(
+    bw: np.ndarray, n_classes: int | None, scheme: str = "quantile"
+) -> tuple[np.ndarray, np.ndarray]:
+    """Discretize link bandwidths into ``n_classes`` classes (paper's knob).
+
+    Each positive edge is replaced by the *floor* of its class (conservative:
+    the algorithm never assumes more bandwidth than the link has).  With
+    ``n_classes=None`` the graph is returned unquantized (infinite classes).
+    Returns (quantized bw matrix, ascending class floor values).
+    """
+    bw = np.asarray(bw, dtype=float)
+    pos = bw[bw > 0]
+    if n_classes is None or pos.size == 0:
+        vals = np.unique(pos) if pos.size else np.array([])
+        return bw.copy(), vals
+    n_classes = max(1, int(n_classes))
+    lo, hi = pos.min(), pos.max()
+    if scheme == "quantile":
+        qs = np.quantile(pos, np.linspace(0.0, 1.0, n_classes + 1))
+    elif scheme == "geometric":
+        qs = np.geomspace(lo, hi, n_classes + 1) if lo > 0 else np.linspace(lo, hi, n_classes + 1)
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    floors = qs[:-1]
+    # map each edge to the floor of its bucket
+    idx = np.clip(np.searchsorted(qs, bw, side="right") - 1, 0, n_classes - 1)
+    out = np.where(bw > 0, floors[idx], 0.0)
+    return out, np.unique(floors)
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlacementResult:
+    feasible: bool
+    path: tuple[int, ...]
+    bottleneck_latency: float  # on the TRUE (unquantized) bandwidths
+    algorithm: str
+    trials_used: int = 0
+
+    @property
+    def throughput(self) -> float:
+        if not self.feasible:
+            return 0.0
+        return float("inf") if self.bottleneck_latency == 0 else 1.0 / self.bottleneck_latency
+
+
+def _true_bottleneck(
+    boundaries: Sequence[float],
+    path: Sequence[int],
+    comm: CommGraph,
+    in_bytes: float = 0.0,
+    out_bytes: float = 0.0,
+    dispatcher: int | None = None,
+) -> float:
+    lat = 0.0
+    for i, w in enumerate(boundaries):
+        b = comm.bw[path[i], path[i + 1]]
+        lat = max(lat, np.inf if b <= 0 else w / b)
+    if dispatcher is not None:
+        if in_bytes > 0:
+            b = comm.bw[dispatcher, path[0]]
+            lat = max(lat, np.inf if b <= 0 else in_bytes / b)
+        if out_bytes > 0:
+            b = comm.bw[path[-1], dispatcher]
+            lat = max(lat, np.inf if b <= 0 else out_bytes / b)
+    return lat
+
+
+def _infeasible(algo: str) -> PlacementResult:
+    return PlacementResult(False, (), float("inf"), algo)
+
+
+# ---------------------------------------------------------------------------
+# Exact subset DP (minimax) -- oracle + small-n fast path
+# ---------------------------------------------------------------------------
+
+def _exact_minimax_path(
+    boundaries: Sequence[float],
+    part_bytes: Sequence[float],
+    bwq: np.ndarray,
+    cap: np.ndarray,
+) -> tuple[float, list[int]] | None:
+    """Subset DP: dp[S][v] = min bottleneck placing first |S| parts, end v.
+
+    Vectorized per popcount level: O(2^n * n^2) flops but only O(n*k) python
+    iterations, so the Fig.3 simulation sweep stays fast.  Exact on the given
+    (possibly quantized) bandwidth matrix.
+    """
+    n = bwq.shape[0]
+    k = len(part_bytes)
+    if k > n:
+        return None
+    if k == 1:
+        idx = np.flatnonzero(cap >= part_bytes[0])
+        return (0.0, [int(idx[0])]) if idx.size else None
+    INF = np.inf
+    nstates = 1 << n
+    dp = np.full((nstates, n), INF)
+    # latency matrices per boundary position: lat[pos][v, u] = w/bw(v,u)
+    with np.errstate(divide="ignore"):
+        lat = [np.where(bwq > 0, w / np.maximum(bwq, 1e-300), INF) for w in boundaries]
+        for L in lat:
+            np.fill_diagonal(L, INF)
+    ok0 = np.flatnonzero(cap >= part_bytes[0])
+    if ok0.size == 0:
+        return None
+    dp[1 << ok0, ok0] = 0.0
+    popcount = np.array([bin(s).count("1") for s in range(nstates)], dtype=np.int32)
+    subsets_by_pc = [np.flatnonzero(popcount == p) for p in range(n + 1)]
+    for p in range(1, k):
+        Ss = subsets_by_pc[p]
+        block = dp[Ss]  # (m, n)
+        finite_rows = np.isfinite(block).any(axis=1)
+        if not finite_rows.any():
+            return None  # dead end: no placement of first p partitions
+        Ss, block = Ss[finite_rows], block[finite_rows]
+        pos = p - 1
+        # cand[m, u] = min over v of max(block[m, v], lat[pos][v, u])
+        cand = np.min(np.maximum(block[:, :, None], lat[pos][None, :, :]), axis=1)
+        okc = cap >= part_bytes[p]
+        for u in range(n):
+            if not okc[u]:
+                continue
+            bit = 1 << u
+            mask = (Ss & bit) == 0
+            if not mask.any():
+                continue
+            np.minimum.at(dp, (Ss[mask] | bit, u), cand[mask, u])
+    # best over |S| == k
+    Sk = subsets_by_pc[k]
+    vals = dp[Sk]
+    flat = int(np.argmin(vals))
+    best_state = int(Sk[flat // n])
+    best_v = flat % n
+    best_val = float(vals[flat // n, flat % n])
+    if not np.isfinite(best_val):
+        return None
+    # reconstruct by walking equalities backwards (maxes are exact copies)
+    path = [best_v]
+    S, v, val = best_state, best_v, best_val
+    for p in range(k - 1, 0, -1):
+        Sp = S & ~(1 << v)
+        found = False
+        for u in range(n):
+            if not (Sp >> u) & 1:
+                continue
+            step = max(dp[Sp, u], lat[p - 1][u, v])
+            if step == val or (np.isfinite(step) and step <= val + 1e-18):
+                S, v, val = Sp, u, float(dp[Sp, u])
+                path.append(u)
+                found = True
+                break
+        if not found:  # pragma: no cover - defensive
+            return None
+    path.reverse()
+    return best_val, path
+
+
+# ---------------------------------------------------------------------------
+# Color-coding k-path feasibility (large n)
+# ---------------------------------------------------------------------------
+
+def _color_coding_feasible(
+    feas: list[np.ndarray],  # per-position boolean edge feasibility (n, n)
+    cap_ok: list[np.ndarray],  # per-position boolean node feasibility (n,)
+    k: int,
+    trials: int,
+    rng: np.random.Generator,
+) -> list[int] | None:
+    """Alon-Yuster-Zwick color coding: random k-colorings + color-subset DP.
+
+    Returns a feasible path (list of k node ids) or None.  Monte-Carlo: may
+    miss a feasible path with probability <= (1 - k!/k^k)^trials.
+    """
+    if k == 1:
+        idx = np.flatnonzero(cap_ok[0])
+        return [int(idx[0])] if idx.size else None
+    n = feas[0].shape[0]
+    nstates = 1 << k
+    popcount = np.array([bin(s).count("1") for s in range(nstates)], dtype=np.int32)
+    order = np.argsort(popcount, kind="stable")
+    for _ in range(trials):
+        colors = rng.integers(0, k, size=n)
+        color_bit = (1 << colors).astype(np.int64)
+        dp = np.zeros((nstates, n), dtype=bool)
+        parent = np.full((nstates, n), -1, dtype=np.int32)
+        for v in range(n):
+            if cap_ok[0][v]:
+                dp[color_bit[v], v] = True
+        found: tuple[int, int] | None = None
+        for S in order:
+            pc = popcount[S]
+            if pc == 0 or pc >= k:
+                continue
+            row = dp[S]
+            if not row.any():
+                continue
+            pos = pc - 1
+            # reach[u] = any_v row[v] & feas[pos][v, u]
+            reach = row @ feas[pos]  # bool matmul
+            newmask = reach & cap_ok[pc] & ((color_bit & S) == 0)
+            if not newmask.any():
+                continue
+            vs = np.flatnonzero(row)
+            for u in np.flatnonzero(newmask):
+                S2 = S | int(color_bit[u])
+                if not dp[S2, u]:
+                    dp[S2, u] = True
+                    # any predecessor works; pick the first feasible
+                    pred = vs[feas[pos][vs, u]][0]
+                    parent[S2, u] = pred
+                    if popcount[S2] == k:
+                        found = (S2, u)
+            if found:
+                break
+        if found:
+            S, v = found
+            path = [v]
+            while parent[S, v] >= 0:
+                u = int(parent[S, v])
+                S &= ~int(1 << int(np.log2(int(color_bit[v]))))
+                v = u
+                path.append(v)
+            path.reverse()
+            return [int(x) for x in path]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Public placement algorithms
+# ---------------------------------------------------------------------------
+
+def place_color_coding(
+    boundaries: Sequence[float],
+    part_bytes: Sequence[float],
+    comm: CommGraph,
+    n_classes: int | None = 4,
+    trials: int = 60,
+    seed: int = 0,
+    exact_limit: int = EXACT_NODE_LIMIT,
+    in_bytes: float = 0.0,
+    out_bytes: float = 0.0,
+    dispatcher: int | None = None,
+) -> PlacementResult:
+    """SEIFER placement: bandwidth-class quantization + min-bottleneck k-path.
+
+    Small clusters (n <= exact_limit) use the exact subset DP on the
+    quantized graph; larger clusters binary-search the candidate bottleneck
+    latencies with color-coding feasibility checks.  The reported bottleneck
+    latency is always evaluated on the TRUE bandwidths of the found path.
+    """
+    algo = f"color_coding(c={n_classes})"
+    k = len(part_bytes)
+    if k == 0 or k > comm.n:
+        return _infeasible(algo)
+    bwq, class_vals = quantize_bandwidths(comm.bw, n_classes)
+    cap = comm.node_capacity
+
+    if comm.n <= exact_limit:
+        res = _exact_minimax_path(boundaries, part_bytes, bwq, cap)
+        if res is None:
+            return _infeasible(algo)
+        _, path = res
+        lat = _true_bottleneck(boundaries, path, comm, in_bytes, out_bytes, dispatcher)
+        return PlacementResult(True, tuple(path), float(lat), algo)
+
+    # ---- large n: binary search over candidate latencies ----
+    rng = np.random.default_rng(seed)
+    cands = sorted(
+        {w / c for w in boundaries for c in class_vals if c > 0 and w > 0} | {0.0}
+    )
+    if not cands:
+        cands = [0.0]
+    cap_ok = [cap >= pb for pb in part_bytes]
+    lo, hi = 0, len(cands) - 1
+    best_path: list[int] | None = None
+    trials_used = 0
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        L = cands[mid]
+        feas = [
+            (bwq > 0) & (bwq * max(L, 1e-300) >= w) if w > 0 else (bwq > 0)
+            for w in boundaries
+        ]
+        path = _color_coding_feasible(feas, cap_ok, k, trials, rng)
+        trials_used += trials
+        if path is not None:
+            best_path = path
+            hi = mid - 1
+        else:
+            lo = mid + 1
+    if best_path is None:
+        return _infeasible(algo)
+    lat = _true_bottleneck(boundaries, best_path, comm, in_bytes, out_bytes, dispatcher)
+    return PlacementResult(True, tuple(best_path), float(lat), algo, trials_used)
+
+
+def place_greedy(
+    boundaries: Sequence[float],
+    part_bytes: Sequence[float],
+    comm: CommGraph,
+    in_bytes: float = 0.0,
+    out_bytes: float = 0.0,
+    dispatcher: int | None = None,
+) -> PlacementResult:
+    """Left-to-right greedy: from every start node, repeatedly take the
+    highest-bandwidth feasible edge.  Cheap baseline (paper's 'edge
+    matching' in its simplest form)."""
+    algo = "greedy"
+    k = len(part_bytes)
+    n = comm.n
+    if k == 0 or k > n:
+        return _infeasible(algo)
+    best: tuple[float, list[int]] | None = None
+    for start in range(n):
+        if comm.node_capacity[start] < part_bytes[0]:
+            continue
+        path = [start]
+        used = {start}
+        ok = True
+        for pos in range(k - 1):
+            v = path[-1]
+            cand_bw = np.array(
+                [
+                    comm.bw[v, u]
+                    if u not in used and comm.node_capacity[u] >= part_bytes[pos + 1]
+                    else -1.0
+                    for u in range(n)
+                ]
+            )
+            u = int(np.argmax(cand_bw))
+            if cand_bw[u] <= 0:
+                ok = False
+                break
+            path.append(u)
+            used.add(u)
+        if not ok:
+            continue
+        lat = _true_bottleneck(boundaries, path, comm, in_bytes, out_bytes, dispatcher)
+        if best is None or lat < best[0]:
+            best = (lat, path)
+    if best is None:
+        return _infeasible(algo)
+    return PlacementResult(True, tuple(best[1]), float(best[0]), algo)
+
+
+def place_random(
+    boundaries: Sequence[float],
+    part_bytes: Sequence[float],
+    comm: CommGraph,
+    seed: int = 0,
+    attempts: int = 20,
+    in_bytes: float = 0.0,
+    out_bytes: float = 0.0,
+    dispatcher: int | None = None,
+) -> PlacementResult:
+    """Random feasible path -- the no-algorithm baseline."""
+    algo = "random"
+    rng = np.random.default_rng(seed)
+    k = len(part_bytes)
+    n = comm.n
+    if k == 0 or k > n:
+        return _infeasible(algo)
+    for _ in range(attempts):
+        perm = rng.permutation(n)[:k]
+        if any(comm.node_capacity[perm[j]] < part_bytes[j] for j in range(k)):
+            continue
+        if any(comm.bw[perm[i], perm[i + 1]] <= 0 for i in range(k - 1)):
+            continue
+        lat = _true_bottleneck(boundaries, list(perm), comm, in_bytes, out_bytes, dispatcher)
+        return PlacementResult(True, tuple(int(x) for x in perm), float(lat), algo)
+    return _infeasible(algo)
+
+
+def place_optimal(
+    boundaries: Sequence[float],
+    part_bytes: Sequence[float],
+    comm: CommGraph,
+    in_bytes: float = 0.0,
+    out_bytes: float = 0.0,
+    dispatcher: int | None = None,
+) -> PlacementResult:
+    """Exact optimum on the TRUE bandwidths (subset DP).  n <= 14 only.
+
+    Used for the approximation-ratio benchmark (paper Sec. 4, item 2).
+    """
+    algo = "optimal"
+    if comm.n > EXACT_NODE_LIMIT:
+        raise ValueError(f"place_optimal limited to n <= {EXACT_NODE_LIMIT}")
+    k = len(part_bytes)
+    if k == 0 or k > comm.n:
+        return _infeasible(algo)
+    res = _exact_minimax_path(boundaries, part_bytes, comm.bw, comm.node_capacity)
+    if res is None:
+        return _infeasible(algo)
+    _, path = res
+    lat = _true_bottleneck(boundaries, path, comm, in_bytes, out_bytes, dispatcher)
+    return PlacementResult(True, tuple(path), float(lat), algo)
+
+
+def place_brute_force(
+    boundaries: Sequence[float],
+    part_bytes: Sequence[float],
+    comm: CommGraph,
+) -> PlacementResult:
+    """Permutation brute force (n <= 8) -- test oracle for place_optimal."""
+    algo = "brute_force"
+    n, k = comm.n, len(part_bytes)
+    if n > 8:
+        raise ValueError("brute force limited to n <= 8")
+    if k == 0 or k > n:
+        return _infeasible(algo)
+    best: tuple[float, tuple[int, ...]] | None = None
+    for perm in itertools.permutations(range(n), k):
+        if any(comm.node_capacity[perm[j]] < part_bytes[j] for j in range(k)):
+            continue
+        lat = _true_bottleneck(boundaries, perm, comm)
+        if np.isfinite(lat) and (best is None or lat < best[0]):
+            best = (lat, perm)
+    if best is None:
+        return _infeasible(algo)
+    return PlacementResult(True, best[1], float(best[0]), algo)

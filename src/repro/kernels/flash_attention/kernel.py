@@ -1,0 +1,144 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Grid: (B * KH * G, nq, nk) -- TPU executes the last grid dim sequentially,
+so the (m, l, acc) online-softmax state lives in VMEM scratch across the nk
+steps of one q-row and the output block is written on the row's final step.
+BlockSpecs tile q/o to (block_q, hd) and k/v to (block_k, hd) in VMEM; the
+MXU sees (block_q x hd) @ (hd x block_k) and (block_q x block_k) @
+(block_k x hd) matmuls -- block sizes default to 512/1024 and hd is 64-256
+(MXU lanes are 128-wide; hd=64 pads one lane tile).
+
+VMEM budget per core at the defaults (hd=128, bf16 in / f32 scratch):
+  q 512x128x2 = 128 KiB, k/v 1024x128x2 = 256 KiB each (x2 for double
+  buffering), acc 512x128x4 = 256 KiB, m/l 4 KiB  ->  ~1.4 MiB of ~16 MiB.
+
+Causal/window masking is positional inside the kernel; fully-dead blocks are
+skipped with ``pl.when`` (predication -- no MXU work issued).  The dry-run
+lowers the jnp blockwise twin in ``ops.py`` (identical math); this kernel is
+the TPU deployment artifact, validated in interpret mode against ``ref.py``
+over shape/dtype sweeps in ``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref,  # VMEM tiles: (1, bq, hd), (1, bk, hd), (1, bk, hd)
+    o_ref,  # (1, bq, hd)
+    m_scr, l_scr, acc_scr,  # VMEM scratch, persistent across the nk grid dim
+    *, block_q: int, block_k: int, nk: int, causal: bool, window: int,
+    softcap: float, scale: float,
+):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level liveness: skip fully-masked tiles entirely
+    q_lo = i * block_q
+    k_lo = j * block_k
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_lo + block_q - 1)
+    if window > 0:
+        live = jnp.logical_and(live, q_lo - (k_lo + block_k - 1) < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            ok = jnp.logical_and(ok, qpos >= kpos)
+        if window > 0:
+            ok = jnp.logical_and(ok, qpos - kpos < window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + p.sum(axis=1)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, KH, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 512,
+    block_k: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """TPU flash attention forward (GQA folded into the batch grid dim)."""
+    b, sq, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    if sq % block_q or skv % block_k:
+        raise ValueError(f"seq ({sq},{skv}) must divide blocks ({block_q},{block_k})")
+    nq, nk = sq // block_q, skv // block_k
+
+    qg = jnp.moveaxis(q.reshape(b, sq, kh, g, hd), 1, 3).reshape(b * kh * g, sq, hd)
+    kg = jnp.moveaxis(k, 1, 2).reshape(b * kh, skv, hd)
+    vg = jnp.moveaxis(v, 1, 2).reshape(b * kh, skv, hd)
+
+    kernel = functools.partial(
+        _fa_kernel, block_q=block_q, block_k=block_k, nk=nk, causal=causal,
+        window=window, softcap=softcap, scale=hd**-0.5,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kh * g, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, i, j: (bh // g, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, i, j: (bh // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kh * g, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    out = out.reshape(b, kh, g, sq, hd)
+    return jnp.moveaxis(out, 3, 1).reshape(b, sq, h, hd)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle: naive softmax attention with GQA/causal/window/softcap.
+
+Materializes the full (Sq, Skv) logits -- use only at test shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, KH, hd)
+    v: jax.Array,  # (B, Skv, KH, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, hd).astype(jnp.float32) * hd**-0.5
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg, k.astype(jnp.float32))
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(ok[None, None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", w, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)

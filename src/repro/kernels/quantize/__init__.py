@@ -1,0 +1,3 @@
+from repro.kernels.quantize.ops import dequantize_int8, quantize_int8
+
+__all__ = ["quantize_int8", "dequantize_int8"]

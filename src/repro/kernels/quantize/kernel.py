@@ -1,0 +1,91 @@
+"""Pallas TPU kernels: blockwise int8 quantize / dequantize.
+
+Tiling: rows of the flattened (N, d) input are processed ``row_tile`` at a
+time; the trailing dim is reshaped to (d/block, block) inside the kernel so
+the VPU reduces |x| over the lane dimension.  VMEM per step at defaults
+(row_tile=256, d=8192, bf16): in 4 MiB + out 2 MiB + scales 128 KiB -- fits
+comfortably with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, block: int):
+    x = x_ref[...].astype(jnp.float32)  # (rows, d)
+    rows, d = x.shape
+    xb = x.reshape(rows, d // block, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / safe[..., None]), -127, 127)
+    q_ref[...] = q.reshape(rows, d).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref, *, block: int):
+    rows, d = q_ref.shape
+    qb = q_ref[...].reshape(rows, d // block, block).astype(jnp.float32)
+    x = qb * s_ref[...][..., None]
+    x_ref[...] = x.reshape(rows, d).astype(x_ref.dtype)
+
+
+def quantize_int8_tpu(
+    x: jax.Array, block: int = 256, row_tile: int = 256, interpret: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """x (..., d) -> (int8 (..., d), f32 scales (..., d/block))."""
+    *lead, d = x.shape
+    n = 1
+    for s in lead:
+        n *= s
+    x2 = x.reshape(n, d)
+    rt = min(row_tile, n)
+    if n % rt:
+        rt = n
+    q, s = pl.pallas_call(
+        functools.partial(_quant_kernel, block=block),
+        grid=(n // rt,),
+        in_specs=[pl.BlockSpec((rt, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rt, d), lambda i: (i, 0)),
+            pl.BlockSpec((rt, d // block), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.int8),
+            jax.ShapeDtypeStruct((n, d // block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2)
+    return q.reshape(*lead, d), s.reshape(*lead, d // block)
+
+
+def dequantize_int8_tpu(
+    q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16,
+    row_tile: int = 256, interpret: bool = False,
+) -> jax.Array:
+    *lead, d = q.shape
+    block = d // scale.shape[-1]
+    n = 1
+    for s in lead:
+        n *= s
+    q2 = q.reshape(n, d)
+    s2 = scale.reshape(n, d // block)
+    rt = min(row_tile, n)
+    if n % rt:
+        rt = n
+    x = pl.pallas_call(
+        functools.partial(_dequant_kernel, block=block),
+        grid=(n // rt,),
+        in_specs=[
+            pl.BlockSpec((rt, d), lambda i: (i, 0)),
+            pl.BlockSpec((rt, d // block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), dtype),
+        interpret=interpret,
+    )(q2, s2)
+    return x.reshape(*lead, d)

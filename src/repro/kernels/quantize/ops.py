@@ -1,0 +1,36 @@
+"""Jit'd wrappers for boundary int8 compression.
+
+``use_pallas`` selects the TPU kernel (tests exercise it in interpret mode);
+the default jnp path is what the dry-run lowers -- XLA fuses it into two
+cheap VPU passes either way.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize.kernel import dequantize_int8_tpu, quantize_int8_tpu
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+
+
+@partial(jax.jit, static_argnames=("block", "use_pallas", "interpret"))
+def quantize_int8(
+    x: jax.Array, block: int = 256, *, use_pallas: bool = False,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    if use_pallas:
+        return quantize_int8_tpu(x, block=block, interpret=interpret)
+    return quantize_ref(x, block=block)
+
+
+@partial(jax.jit, static_argnames=("dtype", "use_pallas", "interpret"))
+def dequantize_int8(
+    q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16, *,
+    use_pallas: bool = False, interpret: bool = False,
+) -> jax.Array:
+    if use_pallas:
+        return dequantize_int8_tpu(q, scale, dtype=dtype, interpret=interpret)
+    return dequantize_ref(q, scale, dtype=dtype)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for blockwise int8 quantization (boundary compression).
+
+SEIFER compresses inter-partition activations with ZFP/LZ4 on the wire; the
+TPU-native analogue is blockwise symmetric int8: each ``block``-wide slice of
+the trailing dim gets an f32 scale = max|x| / 127.  ~2x wire compression for
+bf16 activations at <0.5% relative error, with an MXU/VPU-friendly layout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jax.Array, block: int = 256) -> tuple[jax.Array, jax.Array]:
+    """x (..., d) -> (q int8 (..., d), scales f32 (..., d/block))."""
+    *lead, d = x.shape
+    if d % block:
+        raise ValueError(f"trailing dim {d} must divide block {block}")
+    xb = x.astype(jnp.float32).reshape(*lead, d // block, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / safe[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(*lead, d), scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    *lead, d = q.shape
+    block = d // scale.shape[-1]
+    xb = q.reshape(*lead, d // block, block).astype(jnp.float32)
+    return (xb * scale[..., None]).reshape(*lead, d).astype(dtype)

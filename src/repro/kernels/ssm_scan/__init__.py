@@ -1,0 +1,3 @@
+from repro.kernels.ssm_scan.ops import ssd_chunked
+
+__all__ = ["ssd_chunked"]

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: chunked SSD (Mamba2) selective-state scan.
+
+Grid (B, H, nc): the chunk dim is LAST, so TPU executes it sequentially and
+the (dh, N) recurrent state lives in VMEM scratch across a head's chunks
+(the same scratch-carry idiom as the flash-attention kernel).  Per step the
+MXU sees three small matmuls: C@B^T (Q,N)x(N,Q), scores@x (Q,Q)x(Q,dh) and
+x^T@(B*decay) (dh,Q)x(Q,N).  VMEM at Q=128, N=64, dh=64: inputs ~100 KiB,
+L-matrix 64 KiB f32, state 16 KiB -- trivially resident.
+
+The per-chunk cumulative decays are precomputed outside (one cumsum); the
+kernel consumes cum (B,S,H) so there is no sequential math inside a chunk.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xs_ref, bm_ref, cm_ref, dt_ref, cum_ref, y_ref, state_scr,
+                *, q: int, nc: int):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xs = xs_ref[0, :, 0, :].astype(jnp.float32)  # (Q, dh)
+    bm = bm_ref[0].astype(jnp.float32)  # (Q, N)
+    cm = cm_ref[0].astype(jnp.float32)  # (Q, N)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    cum = cum_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+
+    # intra-chunk: masked decay-weighted attention over the chunk
+    ldiff = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (q, q), 1
+    )
+    lmat = jnp.where(tri, jnp.exp(ldiff), 0.0)
+    gbc = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (Q, Q)
+    scores = gbc * lmat * dt[None, :]
+    y = jax.lax.dot_general(scores, xs, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, dh)
+
+    # inter-chunk: readout of the carried state
+    state = state_scr[...]  # (dh, N)
+    y += jax.lax.dot_general(cm, state, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32) * jnp.exp(cum)[:, None]
+
+    # state update
+    decay_out = jnp.exp(cum[-1] - cum) * dt  # (Q,)
+    contrib = jax.lax.dot_general(
+        xs, bm * decay_out[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (dh, N)
+    state_scr[...] = state * jnp.exp(cum[-1]) + contrib
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_chunked_tpu(xs, bm, cm, dt, a, *, chunk: int = 128, interpret: bool = False):
+    """xs (B,S,H,dh), bm/cm (B,S,N), dt (B,S,H), a (H,) -> y (B,S,H,dh) f32."""
+    b, s, h, dh = xs.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    if s % q:
+        raise ValueError(f"seq {s} must divide chunk {q}")
+    nc = s // q
+    cum = jnp.cumsum((dt * a).reshape(b, nc, q, h), axis=2).reshape(b, s, h)
+
+    kernel = functools.partial(_ssd_kernel, q=q, nc=nc)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, dh), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, q, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, q, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+        ],
+        out_specs=pl.BlockSpec((1, q, 1, dh), lambda bi, hi, ci: (bi, ci, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, dh), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dh, n), jnp.float32)],
+        interpret=interpret,
+    )(xs, bm, cm, dt, cum)
+    return y

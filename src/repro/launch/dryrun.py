@@ -1,0 +1,219 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch x shape) on the production
+meshes, record memory/cost/collective statistics.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first init.  Smoke tests and benches never import this module.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_cells
+from repro.launch import specs as specs_lib
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import (
+    DCN_BW,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+)
+from repro.runtime import serve as serve_lib
+from repro.runtime import train as train_lib
+from repro.sharding import (
+    ShardingPolicy,
+    batch_pspec,
+    cache_shardings,
+    param_shardings,
+    state_shardings,
+)
+
+BIG_PARAMS = 1e9  # models above this train with gradient accumulation
+
+
+def _batch_shardings(mesh, batch_specs):
+    bspec = batch_pspec(mesh, jax.tree.leaves(batch_specs)[0].shape[0])
+
+    def leaf(x):
+        extra = (None,) * (x.ndim - 1)
+        return NamedSharding(mesh, P(bspec[0] if len(bspec) else None, *extra))
+
+    return jax.tree.map(leaf, batch_specs)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool):
+    """Build and lower the step function for one dry-run cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = ShardingPolicy(cfg, mesh)
+
+    if shape.kind == "train":
+        micro = 0
+        if cfg.param_count() >= BIG_PARAMS:
+            micro = max(shape.global_batch // 8, 1)
+        if os.environ.get("REPRO_MICROBATCH"):  # SPerf sweeps
+            micro = int(os.environ["REPRO_MICROBATCH"])
+        opt = train_lib.OptConfig(microbatch=micro, accum_dtype=cfg.opt_state_dtype)
+        step = train_lib.make_train_step(cfg, opt, policy)
+        state = specs_lib.state_specs(cfg, shape)
+        batch = specs_lib.input_specs(cfg, shape)
+        in_sh = (state_shardings(cfg, mesh, state), _batch_shardings(mesh, batch))
+        out_sh = (state_shardings(cfg, mesh, state), None)
+        fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0,))
+        with mesh:
+            return fn.lower(state, batch), cfg, shape, mesh
+
+    params = specs_lib.param_specs(cfg, shape)
+    p_sh = param_shardings(cfg, mesh, params)
+    if shape.kind == "prefill":
+        step = serve_lib.make_prefill_step(cfg, policy)
+        batch = specs_lib.input_specs(cfg, shape)
+        fn = jax.jit(step, in_shardings=(p_sh, _batch_shardings(mesh, batch)))
+        with mesh:
+            return fn.lower(params, batch), cfg, shape, mesh
+
+    # decode
+    enc_len = shape.seq_len if cfg.family == "audio" else 0
+    step = serve_lib.make_serve_step(cfg, policy, enc_len=enc_len)
+    caches = specs_lib.cache_specs(cfg, shape)
+    c_sh = cache_shardings(cfg, mesh, caches, shape.global_batch)
+    tokens = specs_lib.input_specs(cfg, shape)["tokens"]
+    t_sh = _batch_shardings(mesh, {"tokens": tokens})["tokens"]
+    fn = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh),
+                 out_shardings=(t_sh, c_sh), donate_argnums=(1,))
+    with mesh:
+        return fn.lower(params, caches, tokens), cfg, shape, mesh
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D (train) or 2·N_active·D (inference) useful FLOPs."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    return (6.0 if shape.kind == "train" else 2.0) * n * tokens
+
+
+def analyse(lowered, cfg, shape, mesh, *, compile: bool = True) -> dict:
+    chips = mesh.devices.size
+    rec: dict = {
+        "arch": cfg.name, "shape": shape.name, "chips": chips,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+    }
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    hlo_text = compiled.as_text()
+    hc = analyze_hlo(hlo_text)  # trip-count-aware (XLA counts while bodies once)
+    flops = hc.flops
+    bytes_acc = hc.bytes
+    rec["hlo_gflops_per_chip"] = flops / 1e9
+    rec["hlo_gbytes_per_chip"] = bytes_acc / 1e9
+    cost = compiled.cost_analysis() or {}
+    rec["xla_flops_once"] = float(cost.get("flops", 0.0))  # reference only
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[k] = int(v)
+        args = rec.get("argument_size_in_bytes", 0)
+        temp = rec.get("temp_size_in_bytes", 0)
+        rec["hbm_per_chip_gb"] = round((args + temp) / 1e9, 3)
+
+    rec["collective_bytes_per_chip"] = hc.total_collective_bytes
+    rec["collective_ops"] = hc.collective_count
+    rec["collective_bytes_by_op"] = hc.collective_bytes
+
+    # --- roofline terms (seconds) ---
+    rec["t_compute"] = flops / PEAK_FLOPS_BF16
+    rec["t_memory"] = bytes_acc / HBM_BW
+    link_bw = ICI_BW  # intra-pod; DCN-crossing collectives noted separately
+    rec["t_collective"] = hc.total_collective_bytes / link_bw
+    terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+             "collective": rec["t_collective"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    rec["model_gflops_total"] = mf / 1e9
+    rec["useful_flops_ratio"] = mf / (flops * chips) if flops else 0.0
+    rec["roofline_frac"] = (
+        rec["t_compute"] / max(terms.values()) if max(terms.values()) > 0 else 0.0
+    )
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
+    try:
+        lowered, cfg, shape, mesh = lower_cell(arch, shape_name, multi_pod=multi_pod)
+        rec = analyse(lowered, cfg, shape, mesh)
+        rec["ok"] = True
+    except Exception as e:  # record failures; the harness reports them
+        rec = {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "ok": False, "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-2000:],
+        }
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        for name, cfg in ARCHS.items():
+            for sh in shape_cells(cfg):
+                for mp in meshes:
+                    cells.append((name, sh, mp))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    results = []
+    for arch, sh, mp in cells:
+        rec = run_cell(arch, sh, multi_pod=mp)
+        results.append(rec)
+        status = "OK " if rec.get("ok") else "FAIL"
+        extra = (
+            f"compile={rec.get('compile_s')}s hbm/chip={rec.get('hbm_per_chip_gb')}GB "
+            f"bottleneck={rec.get('bottleneck')} roofline={rec.get('roofline_frac', 0):.2f}"
+            if rec.get("ok") else rec.get("error", "")
+        )
+        print(f"[{status}] {arch} x {sh} @ {rec.get('mesh')}  {extra}", flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {len(results)} records to {args.out}")
+    return 0 if all(r.get("ok") for r in results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,91 @@
+"""Collective-byte accounting from compiled/lowered HLO text.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the HLO:
+every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` instruction's *output* shape is summed (bytes a device
+sends/receives is proportional to the op's result size; for reduce-scatter
+the result is already the scattered shard).  This is the numerator of the
+collective roofline term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s/]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M,
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, int]
+    count_by_op: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{op}: {self.count_by_op[op]} ops, {self.bytes_by_op[op]/1e6:.1f} MB"
+            for op in sorted(self.bytes_by_op)
+        ]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum output bytes of every collective instruction in the HLO module.
+
+    `-start`/`-done` async pairs are counted once (on `-start`; `-done`
+    carries the same tuple so we skip it).
+    """
+    bytes_by_op: dict[str, int] = defaultdict(int)
+    count_by_op: dict[str, int] = defaultdict(int)
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        line = m.group(0)
+        if f"{op}-done(" in line:
+            continue
+        bytes_by_op[op] += _shape_bytes(shape_str)
+        count_by_op[op] += 1
+    return CollectiveStats(dict(bytes_by_op), dict(count_by_op))

@@ -1,0 +1,31 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module does not touch jax device state.  The dry-run driver
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; tests and benches see the single real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: (16, 16) = 256 chips; 2 pods = (2, 16, 16) = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh():
+    """All locally visible devices on a ("data", "model") mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+# --- TPU v5e hardware constants (roofline denominators) --------------------
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (intra-pod)
+DCN_BW = 6.25e9  # bytes/s per chip (inter-pod, 50 Gbit NIC-class)

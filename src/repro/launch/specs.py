@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs`` returns the batch pytree for a (arch, shape) cell;
+``state_specs`` / ``cache_specs`` derive train-state and decode-cache trees
+with ``jax.eval_shape`` so they always match the real initializers.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.runtime import train as train_lib
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch pytree of ShapeDtypeStructs for this cell."""
+    b = shape.global_batch
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    s = shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (b, lm.PATCH_TOKENS, lm.PATCH_DIM), jnp.bfloat16
+        )
+    return batch
+
+
+def max_pos_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    return shape.seq_len if cfg.family == "audio" else 32768
+
+
+def param_specs(cfg: ModelConfig, shape: ShapeConfig):
+    init = partial(lm.init_params, cfg, jax.random.PRNGKey(0), max_pos=max_pos_for(cfg, shape))
+    return jax.eval_shape(init)
+
+
+def state_specs(cfg: ModelConfig, shape: ShapeConfig):
+    params = param_specs(cfg, shape)
+    return jax.eval_shape(partial(train_lib.init_state, cfg), params)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    init = partial(lm.init_caches, cfg, b, shape.seq_len, enc_len=shape.seq_len)
+    return jax.eval_shape(init)

@@ -1,0 +1,73 @@
+"""Training CLI driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --steps 20 \
+      [--reduced] [--batch 8] [--seq 128] [--ckpt-dir /tmp/ckpt]
+
+Full configs are for real TPU fleets; on this host use --reduced (default).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models import lm
+from repro.runtime import train as train_lib
+from repro.runtime.checkpoint import Checkpointer
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full", action="store_true", help="full (fleet-scale) config")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    print(f"arch={cfg.name} layers={cfg.n_layers} d={cfg.d_model} "
+          f"family={cfg.family} sharding={cfg.sharding}")
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), max_pos=args.seq)
+    state = train_lib.init_state(cfg, params)
+    opt = train_lib.OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                              microbatch=args.microbatch,
+                              accum_dtype=cfg.opt_state_dtype)
+    step_fn = jax.jit(train_lib.make_train_step(cfg, opt))
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ckpt and ckpt.latest_step() >= 0:
+        start, state = ckpt.restore(state)
+        print(f"resumed from step {start}")
+
+    key = jax.random.PRNGKey(1)
+    t0 = time.perf_counter()
+    for i in range(start, args.steps):
+        key, k = jax.random.split(key)
+        batch = {"tokens": jax.random.randint(k, (args.batch, args.seq), 0, cfg.vocab_size)}
+        if cfg.family == "audio":
+            batch["frames"] = jnp.ones((args.batch, args.seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.ones((args.batch, 8, lm.PATCH_DIM), jnp.bfloat16)
+        state, m = step_fn(state, batch)
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(m['loss']):.4f} gnorm {float(m['grad_norm']):.3f}")
+        if ckpt and (i + 1) % args.ckpt_every == 0:
+            ckpt.save(i + 1, state)
+    print(f"{args.steps - start} steps in {time.perf_counter()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

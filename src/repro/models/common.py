@@ -1,0 +1,72 @@
+"""Shared model plumbing: dtype policy, init helpers, sharding hook."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of jnp arrays
+
+
+class ActivationPolicy(Protocol):
+    """Hook the sharding layer injects; models call it on key activations."""
+
+    def act(self, x: jax.Array, kind: str) -> jax.Array: ...
+
+
+class NoSharding:
+    def act(self, x: jax.Array, kind: str) -> jax.Array:
+        return x
+
+
+NO_SHARDING = NoSharding()
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], dtype=jnp.bfloat16,
+               scale: float | None = None) -> jax.Array:
+    """Truncated-normal fan-in init (LM standard)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else fan_in**-0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key: jax.Array, names: list[str]) -> dict[str, jax.Array]:
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+def fp32(x: jax.Array) -> jax.Array:
+    return x.astype(jnp.float32)
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """bf16 x bf16 matmul with f32 accumulation, result cast back."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def matmul_reduced(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Matmul whose output feeds a cross-shard partial-sum (TP-contracted).
+
+    Emits a bf16 dot output (per-shard accumulation is still f32 inside the
+    MXU) so GSPMD's all-reduce moves HALF the bytes of the f32 variant --
+    SPerf iteration: TP activation all-reduces dominated the collective term.
+    """
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+    ).astype(x.dtype)
+
+
+def stack_layer_params(init_one: Callable[[jax.Array], Params], key: jax.Array,
+                       n_layers: int) -> Params:
+    """Initialize n_layers sets of params stacked on a leading axis (for scan)."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)

@@ -1,0 +1,546 @@
+"""Generic LM assembly for every assigned architecture family.
+
+One functional model covering:
+  * dense / vlm / moe decoder-only transformers (GQA, RoPE, local+global
+    alternation, logit softcaps, QKV bias, GeGLU/SwiGLU, tied embeddings),
+  * audio enc-dec (whisper: learned positions, cross-attention, stubbed
+    conv frontend -- precomputed frame embeddings),
+  * ssm (xLSTM: sLSTM + mLSTM groups),
+  * hybrid (zamba2: Mamba2 towers + one shared attention block applied
+    every ``attn_every`` layers).
+
+Layers are grouped and scanned (``jax.lax.scan`` over stacked group params)
+so the HLO stays compact at 61-layer scale; training groups are rematerialized
+with ``jax.checkpoint``.  The vocab-dim loss is computed by a chunked
+cross-entropy (never materializes (B, S, V) logits).
+
+Decode steps carry an explicit cache pytree (KV ring buffers for sliding-
+window layers, recurrent states for ssm/hybrid) and are O(1) in sequence
+length for the sub-quadratic families.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.common import NO_SHARDING, dense_init, embed_init
+from repro.models.layers import (
+    AttnSpec,
+    apply_norm,
+    attention_decode,
+    attention_full,
+    attend,
+    init_attention,
+    init_norm,
+    out_proj,
+    qkv_proj,
+    rope,
+)
+
+PATCH_TOKENS = 256  # vlm: patch embeddings occupy the first positions
+PATCH_DIM = 1024  # vlm: precomputed patch-embedding width
+XENT_CHUNK = 512  # tokens per chunk in the chunked cross-entropy
+
+
+# ---------------------------------------------------------------------------
+# Group structure
+# ---------------------------------------------------------------------------
+
+def group_layout(cfg) -> tuple[int, int]:
+    """(n_groups, layers_per_group) for the scanned stack."""
+    if cfg.family == "ssm":
+        per = max(cfg.slstm_every, 1)
+        return cfg.n_layers // per, per
+    if cfg.family == "hybrid":
+        per = max(cfg.attn_every, 1)
+        return cfg.n_layers // per, per
+    if cfg.local_global:
+        return cfg.n_layers // 2, 2
+    return cfg.n_layers, 1
+
+
+def _attn_spec(cfg, *, local: bool, causal: bool = True) -> AttnSpec:
+    window = cfg.sliding_window if local else 0
+    return AttnSpec(causal=causal, window=window, softcap=cfg.attn_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg, key: jax.Array, *, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": init_norm(cfg, cfg.d_model),
+        "attn": init_attention(cfg, ks[0]),
+        "ln2": init_norm(cfg, cfg.d_model),
+    }
+    if cfg.is_moe:
+        p["mlp"] = moe_lib.init_moe(cfg, ks[1])
+    else:
+        from repro.models.layers import init_mlp
+
+        p["mlp"] = init_mlp(cfg, ks[1])
+    if cfg.post_norm:
+        p["post1"] = init_norm(cfg, cfg.d_model)
+        p["post2"] = init_norm(cfg, cfg.d_model)
+    if cross:
+        p["ln_cross"] = init_norm(cfg, cfg.d_model)
+        p["cross"] = init_attention(cfg, ks[2])
+    return p
+
+
+def _init_group(cfg, key: jax.Array) -> dict:
+    if cfg.family == "ssm":
+        k1, k2 = jax.random.split(key)
+        per = max(cfg.slstm_every, 1)
+        mk = jax.random.split(k2, max(per - 1, 1))
+        return {
+            "slstm_ln": init_norm(cfg, cfg.d_model),
+            "slstm": xlstm_lib.init_slstm(cfg, k1),
+            "mlstm_ln": jax.vmap(lambda _: init_norm(cfg, cfg.d_model))(mk),
+            "mlstm": jax.vmap(partial(xlstm_lib.init_mlstm, cfg))(mk),
+        }
+    if cfg.family == "hybrid":
+        per = max(cfg.attn_every, 1)
+        mk = jax.random.split(key, per)
+        return {
+            "mamba_ln": jax.vmap(lambda _: init_norm(cfg, cfg.d_model))(mk),
+            "mamba": jax.vmap(partial(ssm_lib.init_mamba, cfg))(mk),
+        }
+    if cfg.local_global:
+        k1, k2 = jax.random.split(key)
+        return {"local": _init_block(cfg, k1), "global": _init_block(cfg, k2)}
+    return _init_block(cfg, key)
+
+
+def init_params(cfg, key: jax.Array, *, max_pos: int = 32768) -> dict:
+    keys = jax.random.split(key, 8)
+    n_groups, _ = group_layout(cfg)
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": init_norm(cfg, cfg.d_model),
+        "blocks": jax.vmap(partial(_init_group, cfg))(jax.random.split(keys[1], n_groups)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[2], (cfg.d_model, cfg.vocab_size))
+    if cfg.family == "vlm":
+        params["patch_proj"] = dense_init(keys[3], (PATCH_DIM, cfg.d_model))
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_block(cfg, keys[4])
+    if cfg.family == "audio":
+        enc_keys = jax.random.split(keys[5], cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(partial(_init_block, cfg))(enc_keys),
+            "final_norm": init_norm(cfg, cfg.d_model),
+            "pos": dense_init(keys[6], (max_pos, cfg.d_model), scale=0.02),
+        }
+        params["dec_pos"] = dense_init(keys[7], (max_pos, cfg.d_model), scale=0.02)
+        # decoder blocks get cross-attention
+        dec_keys = jax.random.split(keys[1], n_groups)
+        params["blocks"] = jax.vmap(partial(_init_block, cfg, cross=True))(dec_keys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward blocks (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_sublayer(cfg, p, x, spec: AttnSpec, positions, *, kv_x=None, policy=NO_SHARDING):
+    h = apply_norm(cfg, x, p["ln1" if kv_x is None else "ln_cross"])
+    src = kv_x if kv_x is not None else h  # cross-attn keys from raw encoder output
+    ap = p["attn"] if kv_x is None else p["cross"]
+    q, _, _ = qkv_proj(cfg, ap, h)
+    _, k, v = qkv_proj(cfg, ap, src)
+    if cfg.pos_emb == "rope" and kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q, k, v = policy.act(q, "attn_q"), policy.act(k, "attn_kv"), policy.act(v, "attn_kv")
+    o = attend(q, k, v, spec)
+    o = out_proj(ap, o)
+    if cfg.post_norm and kv_x is None:
+        o = apply_norm(cfg, o, p["post1"])
+    return x + o
+
+
+def _mlp_sublayer(cfg, p, x, *, policy=NO_SHARDING):
+    h = apply_norm(cfg, x, p["ln2"])
+    if cfg.is_moe:
+        o, aux = moe_lib.moe_mlp(cfg, p["mlp"], h)
+    else:
+        from repro.models.layers import mlp
+
+        o, aux = mlp(cfg, p["mlp"], h), 0.0
+    o = policy.act(o, "mlp_out")
+    if cfg.post_norm:
+        o = apply_norm(cfg, o, p["post2"])
+    return x + o, aux
+
+
+def _transformer_block(cfg, p, x, spec, positions, policy, *, enc_out=None):
+    x = _attn_sublayer(cfg, p, x, spec, positions, policy=policy)
+    if enc_out is not None:
+        x = _attn_sublayer(
+            cfg, p, x, AttnSpec(causal=False), positions, kv_x=enc_out, policy=policy
+        )
+    x, aux = _mlp_sublayer(cfg, p, x, policy=policy)
+    return x, aux
+
+
+def _group_forward(cfg, gp, x, positions, policy, *, enc_out=None):
+    """Run one layer-group (full sequence).  Returns (x, aux_loss)."""
+    if cfg.family == "ssm":
+        x = x + xlstm_lib.slstm_forward(
+            cfg, gp["slstm"], apply_norm(cfg, x, gp["slstm_ln"])
+        )
+
+        def mstep(h, inner):
+            ln, mp = inner
+            return h + xlstm_lib.mlstm_forward(cfg, mp, apply_norm(cfg, h, ln)), None
+
+        x, _ = jax.lax.scan(mstep, x, (gp["mlstm_ln"], gp["mlstm"]))
+        return x, 0.0
+    if cfg.family == "hybrid":
+        def mstep(h, inner):
+            ln, mp = inner
+            return h + ssm_lib.mamba_forward(cfg, mp, apply_norm(cfg, h, ln)), None
+
+        x, _ = jax.lax.scan(mstep, x, (gp["mamba_ln"], gp["mamba"]))
+        return x, 0.0  # shared attention applied by the caller
+    if cfg.local_global:
+        x, a1 = _transformer_block(
+            cfg, gp["local"], x, _attn_spec(cfg, local=True), positions, policy
+        )
+        x, a2 = _transformer_block(
+            cfg, gp["global"], x, _attn_spec(cfg, local=False), positions, policy
+        )
+        return x, a1 + a2
+    return _transformer_block(cfg, gp, x, spec=_attn_spec(cfg, local=False),
+                              positions=positions, policy=policy, enc_out=enc_out)
+
+
+def embed_inputs(cfg, params, batch) -> jax.Array:
+    """Token (+patch / frame) embedding.  Returns (B, S, d)."""
+    if cfg.family == "audio":
+        raise ValueError("audio uses encode()/decoder paths")
+    x = params["embed"][batch["tokens"]]  # (B,S,d)
+    if cfg.gemma_norm:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.family == "vlm" and "patches" in batch:
+        p_tok = batch["patches"].shape[1]  # patches occupy the first positions
+        pe = jnp.einsum("bpc,cd->bpd", batch["patches"], params["patch_proj"])
+        x = jnp.concatenate([pe.astype(x.dtype), x[:, p_tok:]], axis=1)
+    return x
+
+
+def forward_hidden(cfg, params, batch, *, policy=NO_SHARDING, remat: bool = False):
+    """Full-sequence forward to final hidden states.  Returns (h, aux)."""
+    if cfg.family == "audio":
+        return _audio_forward(cfg, params, batch, policy=policy, remat=remat)
+    x = embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+
+    shared = params.get("shared_attn")
+
+    def group_fn(x, gp):
+        x, aux = _group_forward(cfg, gp, x, positions, policy)
+        if shared is not None:
+            x, aux2 = _transformer_block(
+                cfg, shared, x, _attn_spec(cfg, local=False), positions, policy
+            )
+            aux = aux + aux2
+        return x, aux
+
+    if remat:
+        group_fn = jax.checkpoint(group_fn)
+
+    def scan_fn(carry, gp):
+        x, aux = carry
+        x, a = group_fn(x, gp)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, 0.0), params["blocks"])
+    x = apply_norm(cfg, x, params["final_norm"])
+    return policy.act(x, "final_hidden"), aux
+
+
+def encode(cfg, params, frames: jax.Array, *, policy=NO_SHARDING, remat: bool = False):
+    """Whisper encoder: frames (B, S, d) -> (B, S, d)."""
+    enc = params["encoder"]
+    s = frames.shape[1]
+    x = frames + enc["pos"][:s][None]
+    spec = AttnSpec(causal=False)
+    positions = jnp.arange(s)[None, :]
+
+    def block_fn(bp, x):
+        return _transformer_block(cfg, bp, x, spec, positions, policy)[0]
+
+    if remat:
+        block_fn = jax.checkpoint(block_fn)
+
+    def scan_fn(x, bp):
+        return block_fn(bp, x), None
+
+    x, _ = jax.lax.scan(scan_fn, x, enc["blocks"])
+    return apply_norm(cfg, x, enc["final_norm"])
+
+
+def _audio_forward(cfg, params, batch, *, policy=NO_SHARDING, remat: bool = False):
+    enc_out = encode(cfg, params, batch["frames"], policy=policy, remat=remat)
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = params["embed"][tokens] + params["dec_pos"][:s][None]
+    positions = jnp.arange(s)[None, :]
+
+    def block_fn(bp, x, enc_out):
+        return _group_forward(cfg, bp, x, positions, policy, enc_out=enc_out)[0]
+
+    if remat:
+        block_fn = jax.checkpoint(block_fn)
+
+    def scan_fn(x, bp):
+        return block_fn(bp, x, enc_out), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["blocks"])
+    x = apply_norm(cfg, x, params["final_norm"])
+    return policy.act(x, "final_hidden"), 0.0
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (never materializes (B, S, V))
+# ---------------------------------------------------------------------------
+
+def lm_head_matrix(cfg, params) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def chunked_xent(
+    cfg, params, hidden: jax.Array, labels: jax.Array, mask: jax.Array,
+    *, chunk: int = XENT_CHUNK, policy=NO_SHARDING,
+) -> jax.Array:
+    """Mean next-token cross entropy.  hidden (B,S,d); labels/mask (B,S)."""
+    w = lm_head_matrix(cfg, params)  # (d, V)
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    if s % c:
+        c = s
+    nchunk = s // c
+    h_c = jnp.moveaxis(hidden.reshape(b, nchunk, c, d), 1, 0)
+    y_c = jnp.moveaxis(labels.reshape(b, nchunk, c), 1, 0)
+    m_c = jnp.moveaxis(mask.reshape(b, nchunk, c), 1, 0)
+
+    def step(acc, inp):
+        h, y, m = inp
+        logits = jnp.einsum("bcd,dv->bcv", h, w).astype(jnp.float32)
+        logits = policy.act(logits, "logits")
+        if cfg.final_softcap > 0:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (acc[0] + nll.sum(), acc[1] + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)), (h_c, y_c, m_c))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg, params, batch, *, policy=NO_SHARDING, aux_weight: float = 0.01):
+    """Next-token LM loss over the batch; adds the MoE aux loss."""
+    hidden, aux = forward_hidden(cfg, params, batch, policy=policy, remat=True)
+    tokens = batch["tokens"]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones(tokens.shape, jnp.float32).at[:, -1].set(0.0)
+    if cfg.family == "vlm" and "patches" in batch:
+        mask = mask.at[:, : batch["patches"].shape[1] - 1].set(0.0)
+    loss = chunked_xent(cfg, params, hidden, labels, mask, policy=policy)
+    return loss + aux_weight * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def _kv_cache(cfg, batch: int, length: int) -> dict:
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, jnp.bfloat16), "v": jnp.zeros(shape, jnp.bfloat16)}
+
+
+def _group_cache(cfg, batch: int, max_len: int) -> dict:
+    if cfg.family == "ssm":
+        per = max(cfg.slstm_every, 1)
+        n_m = max(per - 1, 1)
+        return {
+            "slstm": xlstm_lib.slstm_init_state(cfg, batch),
+            "mlstm": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_m,) + x.shape),
+                xlstm_lib.mlstm_init_cache(cfg, batch),
+            ),
+        }
+    if cfg.family == "hybrid":
+        per = max(cfg.attn_every, 1)
+        mc = ssm_lib.mamba_init_cache(cfg, batch)
+        return {
+            "mamba": jax.tree.map(lambda x: jnp.broadcast_to(x, (per,) + x.shape), mc),
+            "shared_kv": _kv_cache(cfg, batch, max_len),
+        }
+    if cfg.local_global:
+        return {
+            "local": _kv_cache(cfg, batch, min(cfg.sliding_window, max_len)),
+            "global": _kv_cache(cfg, batch, max_len),
+        }
+    return {"kv": _kv_cache(cfg, batch, max_len)}
+
+
+def init_caches(cfg, batch: int, max_len: int, *, enc_len: int = 0) -> dict:
+    n_groups, _ = group_layout(cfg)
+    gc = _group_cache(cfg, batch, max_len)
+    caches: dict[str, Any] = {
+        "pos": jnp.zeros((), jnp.int32),
+        "blocks": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), gc
+        ),
+    }
+    if cfg.family == "audio":
+        cross = _kv_cache(cfg, batch, enc_len or max_len)
+        caches["cross"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), cross
+        )
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def _attn_decode_sub(cfg, p, cache, x, pos, *, local: bool):
+    """One-token attention vs a (ring or linear) KV cache."""
+    h = apply_norm(cfg, x, p["ln1"])
+    q, k, v = qkv_proj(cfg, p["attn"], h)  # (B,1,H,hd)/(B,1,KH,hd)
+    if cfg.pos_emb == "rope":
+        q = rope(q, pos[None, None], cfg.rope_theta)
+        k = rope(k, pos[None, None], cfg.rope_theta)
+    length = cache["k"].shape[1]
+    slot = pos % length if local else jnp.minimum(pos, length - 1)
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    if local:
+        # ring buffer: every written slot is within the window by construction
+        valid = jnp.arange(length) <= jnp.minimum(pos, length - 1)
+        spec = AttnSpec(causal=False, softcap=cfg.attn_softcap)
+        o = _masked_decode(cfg, q, kc, vc, valid, spec)
+    else:
+        spec = AttnSpec(causal=True, softcap=cfg.attn_softcap)
+        o = attention_decode(q, kc, vc, pos + 1, spec)
+    o = out_proj(p["attn"], o)
+    if cfg.post_norm:
+        o = apply_norm(cfg, o, p["post1"])
+    return {"k": kc, "v": vc}, x + o
+
+
+def _masked_decode(cfg, q, kc, vc, valid, spec):
+    b, _, h, hd = q.shape
+    kh = kc.shape[2]
+    qg = q.reshape(b, 1, kh, h // kh, hd)
+    # bf16 caches stay bf16 (mixed-precision dot with f32 accumulation)
+    logits = jnp.einsum(
+        "bqhgk,bshk->bhgqs", (qg.astype(jnp.float32) * hd**-0.5).astype(q.dtype),
+        kc, preferred_element_type=jnp.float32,
+    )
+    if spec.softcap > 0:
+        logits = spec.softcap * jnp.tanh(logits / spec.softcap)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", w.astype(vc.dtype), vc,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def _cross_decode_sub(cfg, p, cross_cache, x, enc_len):
+    h = apply_norm(cfg, x, p["ln_cross"])
+    q, _, _ = qkv_proj(cfg, p["cross"], h)
+    valid = jnp.arange(cross_cache["k"].shape[1]) < enc_len
+    o = _masked_decode(cfg, q, cross_cache["k"], cross_cache["v"], valid, AttnSpec(causal=False))
+    return x + out_proj(p["cross"], o)
+
+
+def _block_decode(cfg, p, cache, x, pos, *, local: bool, cross_cache=None, enc_len=0):
+    kv, x = _attn_decode_sub(cfg, p, cache, x, pos, local=local)
+    if cross_cache is not None:
+        x = _cross_decode_sub(cfg, p, cross_cache, x, enc_len)
+    x, _ = _mlp_sublayer(cfg, p, x)
+    return kv, x
+
+
+def _group_decode(cfg, params, gp, gc, x, pos, *, cross=None, enc_len=0):
+    """Decode one group.  Returns (new group cache, x)."""
+    if cfg.family == "ssm":
+        st, y = xlstm_lib.slstm_step(
+            cfg, gp["slstm"], gc["slstm"], apply_norm(cfg, x, gp["slstm_ln"])
+        )
+        x = x + y
+
+        def mstep(h, inner):
+            ln, mp, mc = inner
+            mc, y = xlstm_lib.mlstm_step(cfg, mp, mc, apply_norm(cfg, h, ln))
+            return h + y, mc
+
+        x, mcs = jax.lax.scan(mstep, x, (gp["mlstm_ln"], gp["mlstm"], gc["mlstm"]))
+        return {"slstm": st, "mlstm": mcs}, x
+    if cfg.family == "hybrid":
+        def mstep(h, inner):
+            ln, mp, mc = inner
+            mc, y = ssm_lib.mamba_step(cfg, mp, mc, apply_norm(cfg, h, ln))
+            return h + y, mc
+
+        x, mcs = jax.lax.scan(mstep, x, (gp["mamba_ln"], gp["mamba"], gc["mamba"]))
+        kv, x = _block_decode(
+            cfg, params["shared_attn"], gc["shared_kv"], x, pos, local=False
+        )
+        return {"mamba": mcs, "shared_kv": kv}, x
+    if cfg.local_global:
+        kv_l, x = _block_decode(cfg, gp["local"], gc["local"], x, pos, local=True)
+        kv_g, x = _block_decode(cfg, gp["global"], gc["global"], x, pos, local=False)
+        return {"local": kv_l, "global": kv_g}, x
+    if cfg.family == "audio":
+        kv, x = _block_decode(
+            cfg, gp, gc["kv"], x, pos, local=False, cross_cache=cross, enc_len=enc_len
+        )
+        return {"kv": kv}, x
+    kv, x = _block_decode(cfg, gp, gc["kv"], x, pos, local=False)
+    return {"kv": kv}, x
+
+
+def decode_step(cfg, params, caches, tokens: jax.Array, *, enc_len: int = 0):
+    """One decode step.  tokens (B, 1) -> (logits (B, 1, V), caches')."""
+    pos = caches["pos"]
+    x = params["embed"][tokens]
+    if cfg.gemma_norm:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.family == "audio":
+        x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0)[None]
+
+    def scan_fn(x, inner):
+        gp, gc, cross = inner
+        gc, x = _group_decode(cfg, params, gp, gc, x, pos, cross=cross, enc_len=enc_len)
+        return x, gc
+
+    cross = caches.get("cross")
+    if cross is None:
+        n_groups, _ = group_layout(cfg)
+        cross = jnp.zeros((n_groups, 0))  # dummy scanned leaf
+    x, new_blocks = jax.lax.scan(scan_fn, x, (params["blocks"], caches["blocks"], cross))
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = jnp.einsum("btd,dv->btv", x, lm_head_matrix(cfg, params)).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    new_caches = dict(caches, blocks=new_blocks, pos=pos + 1)
+    return logits, new_caches

@@ -1,0 +1,93 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-based GShard dispatch.
+
+The dispatch/combine einsum formulation lowers cleanly under GSPMD: expert
+weights are sharded over the "model" axis (expert parallelism), tokens over
+"data"; the combine contraction over the expert axis produces the EP
+all-reduce.  Dispatch-tensor memory is bounded by the ``group_size`` knob
+(tokens are routed within groups): dispatch is (G, Sg, E, C) with
+C = ceil(Sg * top_k * capacity_factor / E), so bytes scale with Sg, not S.
+
+Tokens beyond expert capacity are dropped (classic Switch/GShard semantics);
+the auxiliary load-balancing loss keeps drop rates low in training.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+DEFAULT_GROUP = 512
+
+
+def init_moe(cfg, key: jax.Array) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32, scale=d**-0.5),
+        "w_gate": dense_init(ks[1], (e, d, f)),
+        "w_up": dense_init(ks[2], (e, d, f)),
+        "w_down": dense_init(ks[3], (e, f, d), scale=f**-0.5),
+    }
+
+
+def _capacity(group: int, top_k: int, n_experts: int, cf: float) -> int:
+    c = int(-(-group * top_k * cf // n_experts))  # ceil
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def route(cfg, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Router probabilities and top-k selection.  x: (..., d) bf16.
+
+    Returns (probs (..., E) f32, top_p (..., k) f32, top_e (..., k) i32).
+    Top-k probabilities are renormalized (Mixtral-style).
+    """
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.experts_per_token)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return probs, top_p, top_e
+
+
+def moe_mlp(
+    cfg, p: dict, x: jax.Array, *, group_size: int = DEFAULT_GROUP
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k MoE FFN.  x: (B, S, d).  Returns (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    t = b * s
+    g_sz = min(group_size, t)
+    if t % g_sz:
+        g_sz = t  # fall back to one group (smoke-test sizes)
+    g = t // g_sz
+    xg = x.reshape(g, g_sz, d)
+
+    probs, top_p, top_e = route(cfg, p, xg)  # (G,Sg,E) (G,Sg,k) (G,Sg,k)
+    cap = _capacity(g_sz, k, e, cfg.moe_capacity_factor)
+
+    # --- position of each (token, slot) within its expert's capacity ------
+    onehot_e = jax.nn.one_hot(top_e, e, dtype=jnp.float32)  # (G,Sg,k,E)
+    flat = onehot_e.reshape(g, g_sz * k, e)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat  # (G,Sg*k,E)
+    pos = (pos_flat.reshape(g, g_sz, k, e) * onehot_e).sum(-1)  # (G,Sg,k)
+    keep = (pos < cap).astype(jnp.float32)
+
+    onehot_c = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    # dispatch (G,Sg,E,C): 1 where token s goes to slot c of expert e
+    dispatch = jnp.einsum("gske,gskc,gsk->gsec", onehot_e, onehot_c, keep)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", onehot_e, onehot_c, keep * top_p)
+
+    # --- expert compute -----------------------------------------------------
+    xin = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), x.reshape(g, g_sz, d))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["w_gate"])) * jnp.einsum(
+        "gecd,edf->gecf", xin, p["w_up"]
+    )
+    out = jnp.einsum("gecf,efd->gecd", h.astype(x.dtype), p["w_down"])
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(jnp.float32), out.astype(jnp.float32))
+
+    # --- load-balancing auxiliary loss (Switch Eq. 4) ------------------------
+    frac_tokens = onehot_e.mean(axis=(1, 2))  # (G,E) fraction routed
+    frac_probs = probs.mean(axis=1)  # (G,E)
+    aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,167 @@
+"""Mamba2 (SSD) blocks: chunked parallel scan for train/prefill, O(1) decode.
+
+The chunked SSD algorithm (Mamba2 paper Sec. 6) splits the sequence into
+chunks of ``chunk`` steps; within a chunk the recurrence is materialized as a
+(Q, Q) masked "attention" (quadratic in the chunk only), and a (dh, N) state
+is carried between chunks by ``jax.lax.scan``.  All gate math is fp32.
+
+Layout: d_inner = ssm_expand * d_model, heads of size HEAD_DIM, single B/C
+group (n_groups=1), scalar-per-head A (the Mamba2 restriction).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+HEAD_DIM = 64
+DEFAULT_CHUNK = 256
+
+
+def ssm_dims(cfg) -> tuple[int, int, int]:
+    """(d_inner, n_heads, state N) for the mamba tower of this config."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    return d_in, d_in // HEAD_DIM, max(cfg.ssm_state, 16)
+
+
+def init_mamba(cfg, key: jax.Array) -> dict:
+    d = cfg.d_model
+    d_in, h, n = ssm_dims(cfg)
+    conv_dim = d_in + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * n + h)),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_dim), scale=0.3),
+        "conv_b": jnp.zeros((conv_dim,), jnp.bfloat16),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) = -1 at init
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), jnp.bfloat16),
+        "out_proj": dense_init(ks[3], (d_in, d), scale=d_in**-0.5),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: (B, S, C); w: (K, C).  Sum of shifts."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        jax.lax.dynamic_slice_in_dim(xp, i, x.shape[1], axis=1)
+        * w[i].astype(x.dtype)
+        for i in range(k)
+    )
+    return out + b.astype(x.dtype)
+
+
+def _split_proj(cfg, p: dict, x: jax.Array):
+    """x (B,S,d) -> z (B,S,d_in), xBC (B,S,d_in+2N), dt (B,S,H) fp32."""
+    d_in, h, n = ssm_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"]).astype(x.dtype)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    return z, xbc, dt
+
+
+def _gate_out(cfg, p: dict, y: jax.Array, z: jax.Array) -> jax.Array:
+    """Gated RMSNorm then down-projection.  y, z: (B, S, d_in)."""
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + 1e-6) * p["norm_w"].astype(jnp.float32)
+    return jnp.einsum("bse,ed->bsd", g.astype(z.dtype), p["out_proj"]).astype(z.dtype)
+
+
+def mamba_forward(
+    cfg, p: dict, x: jax.Array, *, chunk: int = DEFAULT_CHUNK
+) -> jax.Array:
+    """Full-sequence forward (train / prefill).  x: (B, S, d) -> (B, S, d)."""
+    b, s, _ = x.shape
+    d_in, h, n = ssm_dims(cfg)
+    q = min(chunk, s)
+    if s % q:
+        raise ValueError(f"seq {s} must divide chunk {q}")
+    nc = s // q
+
+    z, xbc, dt = _split_proj(cfg, p, x)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :d_in].reshape(b, s, h, HEAD_DIM)
+    bm = xbc[..., d_in : d_in + n].astype(jnp.float32)  # (B,S,N)
+    cm = xbc[..., d_in + n :].astype(jnp.float32)
+
+    a = -jnp.exp(p["A_log"])  # (H,)
+    da = dt * a  # (B,S,H) negative
+
+    # chunked tensors: (B, nc, Q, ...)
+    xs_c = xs.reshape(b, nc, q, h, HEAD_DIM).astype(jnp.float32)
+    bm_c = bm.reshape(b, nc, q, n)
+    cm_c = cm.reshape(b, nc, q, n)
+    dt_c = dt.reshape(b, nc, q, h)
+    da_c = da.reshape(b, nc, q, h)
+    cum = jnp.cumsum(da_c, axis=2)  # (B,nc,Q,H)
+
+    def chunk_step(hstate, inp):
+        xs_k, bm_k, cm_k, dt_k, da_k, cum_k = inp  # leading axis = B
+        # ---- intra-chunk (quadratic within chunk) ----
+        # L[t,s] = exp(cum[t] - cum[s]) for s <= t
+        ldiff = cum_k[:, :, None, :] - cum_k[:, None, :, :]  # (B,Q,S,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        lmat = jnp.where(mask[None, :, :, None], jnp.exp(ldiff), 0.0)
+        gbc = jnp.einsum("btn,bsn->bts", cm_k, bm_k)  # (B,Q,S)
+        scores = gbc[:, :, :, None] * lmat * dt_k[:, None, :, :]  # (B,Q,S,H)
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, xs_k)
+        # ---- inter-chunk (carry state) ----
+        decay_in = jnp.exp(cum_k)  # (B,Q,H): decay from chunk start to t
+        y_inter = jnp.einsum("btn,bhdn->bthd", cm_k, hstate) * decay_in[..., None]
+        # ---- state update ----
+        decay_out = jnp.exp(cum_k[:, -1:, :] - cum_k)  # (B,Q,H)
+        contrib = jnp.einsum(
+            "bsh,bsn,bshd->bhdn", decay_out * dt_k, bm_k, xs_k
+        )
+        h_new = hstate * jnp.exp(cum_k[:, -1])[:, :, None, None] + contrib
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, h, HEAD_DIM, n), jnp.float32)
+    inputs = tuple(
+        jnp.moveaxis(t, 1, 0) for t in (xs_c, bm_c, cm_c, dt_c, da_c, cum)
+    )
+    _, y = jax.lax.scan(chunk_step, h0, inputs)
+    y = jnp.moveaxis(y, 0, 1).reshape(b, s, h, HEAD_DIM)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    return _gate_out(cfg, p, y.reshape(b, s, d_in), z)
+
+
+def mamba_init_cache(cfg, batch: int) -> dict:
+    d_in, h, n = ssm_dims(cfg)
+    conv_dim = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, h, HEAD_DIM, n), jnp.float32),
+    }
+
+
+def mamba_step(cfg, p: dict, cache: dict, x: jax.Array) -> tuple[dict, jax.Array]:
+    """Single decode step.  x: (B, 1, d).  Returns (cache', y (B, 1, d))."""
+    b = x.shape[0]
+    d_in, h, n = ssm_dims(cfg)
+    z, xbc, dt = _split_proj(cfg, p, x)  # (B,1,*)
+    window = jnp.concatenate([cache["conv"], xbc.astype(jnp.bfloat16)], axis=1)
+    conv_out = (
+        jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    )
+    xbc1 = jax.nn.silu(conv_out)  # (B, conv_dim)
+    xs = xbc1[:, :d_in].reshape(b, h, HEAD_DIM).astype(jnp.float32)
+    bm = xbc1[:, d_in : d_in + n].astype(jnp.float32)
+    cm = xbc1[:, d_in + n :].astype(jnp.float32)
+    a = -jnp.exp(p["A_log"])
+    dt1 = dt[:, 0]  # (B,H)
+    decay = jnp.exp(dt1 * a)  # (B,H)
+    hstate = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhd->bhdn", dt1, bm, xs
+    )
+    y = jnp.einsum("bn,bhdn->bhd", cm, hstate) + xs * p["D"][None, :, None]
+    out = _gate_out(cfg, p, y.reshape(b, 1, d_in), z)
+    return {"conv": window[:, 1:], "ssm": hstate}, out

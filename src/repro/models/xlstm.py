@@ -1,0 +1,213 @@
+"""xLSTM blocks: chunked-parallel mLSTM and sequential sLSTM.
+
+mLSTM (matrix memory, exponential gating) is a gated linear recurrence; we
+run it with the same chunked state-passing scheme as the Mamba2 SSD kernel
+(quadratic within a chunk, (dh_v+1, dh_k) state across chunks -- the +1 row
+carries the normalizer).  sLSTM (scalar memory, per-head recurrent weights)
+is inherently sequential and scans over time.  All gate math fp32 with the
+max-stabilizer from the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+MLSTM_CHUNK = 256
+GATE_CLIP = 15.0  # clip exp-gate preactivations
+
+
+def mlstm_dims(cfg) -> tuple[int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    return d_in, d_in // cfg.n_heads  # (d_inner, head_dim)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(cfg, key: jax.Array) -> dict:
+    d = cfg.d_model
+    d_in, _ = mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, d_in)),
+        "wk": dense_init(ks[1], (d, d_in)),
+        "wv": dense_init(ks[2], (d, d_in)),
+        "w_gates": dense_init(ks[3], (d, 2 * cfg.n_heads), dtype=jnp.float32),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((cfg.n_heads,)), jnp.full((cfg.n_heads,), 3.0)]
+        ),  # forget-gate bias ~ sigmoid(3) = 0.95
+        "w_ogate": dense_init(ks[4], (d, d_in)),
+        "out_proj": dense_init(ks[5], (d_in, d), scale=d_in**-0.5),
+    }
+
+
+def _mlstm_qkvg(cfg, p: dict, x: jax.Array):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    d_in, dh = mlstm_dims(cfg)
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, h, dh)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, h, dh)
+    gates = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), p["w_gates"]) + p["b_gates"]
+    log_i = jnp.minimum(gates[..., :h], GATE_CLIP)  # exp input gate, clipped
+    log_f = jax.nn.log_sigmoid(gates[..., h:])  # (B,S,H)
+    ogate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["w_ogate"].astype(jnp.float32)))
+    return q, k, v, log_i, log_f, ogate
+
+
+def _mlstm_out(cfg, p: dict, y: jax.Array, ogate: jax.Array, shape) -> jax.Array:
+    b, s = shape
+    d_in, dh = mlstm_dims(cfg)
+    num, den = y[..., :dh], y[..., dh]
+    hout = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    hout = hout.reshape(b, s, d_in) * ogate
+    return jnp.einsum("bse,ed->bsd", hout.astype(jnp.bfloat16), p["out_proj"])
+
+
+def mlstm_forward(cfg, p: dict, x: jax.Array, *, chunk: int = MLSTM_CHUNK) -> jax.Array:
+    """Full-sequence mLSTM.  x: (B, S, d) -> (B, S, d)."""
+    b, s, _ = x.shape
+    hh = cfg.n_heads
+    d_in, dh = mlstm_dims(cfg)
+    q_sz = min(chunk, s)
+    if s % q_sz:
+        raise ValueError(f"seq {s} must divide chunk {q_sz}")
+    nc = s // q_sz
+    q, k, v, log_i, log_f, ogate = _mlstm_qkvg(cfg, p, x)
+    scale = dh**-0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = jnp.concatenate(  # augment with normalizer row
+        [v.astype(jnp.float32), jnp.ones((b, s, hh, 1), jnp.float32)], axis=-1
+    )
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape((b, nc, q_sz) + t.shape[2:]), 1, 0)
+
+    qc, kc, vc, lic, lfc = map(to_chunks, (qf, kf, vf, log_i, log_f))
+    cumf = jnp.cumsum(lfc, axis=2)  # (nc,B,Q,H)
+
+    def chunk_step(cstate, inp):
+        qk, kk, vk, lik, cumk = inp
+        ldiff = cumk[:, :, None, :] - cumk[:, None, :, :] + lik[:, None, :, :]
+        mask = jnp.tril(jnp.ones((q_sz, q_sz), bool))
+        lmat = jnp.where(mask[None, :, :, None], jnp.exp(ldiff), 0.0)  # (B,Q,S,H)
+        gqk = jnp.einsum("bthn,bshn->btsh", qk, kk)  # (B,Q,S,H)
+        y_intra = jnp.einsum("btsh,bshd->bthd", gqk * lmat, vk)
+        decay_in = jnp.exp(cumk)  # (B,Q,H)
+        y_inter = jnp.einsum("bthn,bhdn->bthd", qk, cstate) * decay_in[..., None]
+        decay_out = jnp.exp(cumk[:, -1:, :] - cumk + lik)  # (B,Q,H)
+        contrib = jnp.einsum("bsh,bshn,bshd->bhdn", decay_out, kk, vk)
+        c_new = cstate * jnp.exp(cumk[:, -1])[:, :, None, None] + contrib
+        return c_new, y_intra + y_inter
+
+    c0 = jnp.zeros((b, hh, dh + 1, dh), jnp.float32)
+    _, y = jax.lax.scan(chunk_step, c0, (qc, kc, vc, lic, cumf))
+    y = jnp.moveaxis(y, 0, 1).reshape(b, s, hh, dh + 1)
+    return _mlstm_out(cfg, p, y, ogate, (b, s))
+
+
+def mlstm_init_cache(cfg, batch: int) -> dict:
+    hh = cfg.n_heads
+    _, dh = mlstm_dims(cfg)
+    return {"c": jnp.zeros((batch, hh, dh + 1, dh), jnp.float32)}
+
+
+def mlstm_step(cfg, p: dict, cache: dict, x: jax.Array) -> tuple[dict, jax.Array]:
+    """Single decode step.  x: (B, 1, d)."""
+    b = x.shape[0]
+    hh = cfg.n_heads
+    _, dh = mlstm_dims(cfg)
+    q, k, v, log_i, log_f, ogate = _mlstm_qkvg(cfg, p, x)
+    qf = q[:, 0].astype(jnp.float32) * dh**-0.5  # (B,H,dh)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = jnp.concatenate(
+        [v[:, 0].astype(jnp.float32), jnp.ones((b, hh, 1), jnp.float32)], axis=-1
+    )
+    f1 = jnp.exp(log_f[:, 0])  # (B,H)
+    i1 = jnp.exp(log_i[:, 0])
+    c_new = cache["c"] * f1[:, :, None, None] + i1[:, :, None, None] * (
+        vf[:, :, :, None] * kf[:, :, None, :]
+    )
+    y = jnp.einsum("bhn,bhdn->bhd", qf, c_new)[:, None]  # (B,1,H,dh+1)
+    return {"c": c_new}, _mlstm_out(cfg, p, y, ogate, (b, 1))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(cfg, key: jax.Array) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype=jnp.float32),
+        "r": dense_init(ks[1], (h, dh, 4 * dh), dtype=jnp.float32, scale=dh**-0.5),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]
+        ),  # z, i, f(+3), o
+        "w_up": dense_init(ks[2], (d, 2 * d)),
+        "w_down": dense_init(ks[3], (d, d), scale=d**-0.5),
+    }
+
+
+def _slstm_cell(cfg, p: dict, state, x_t: jax.Array):
+    """One sLSTM step.  x_t: (B, d) fp32-projected gates; state: c,n,h,m (B,H,dh)."""
+    b = x_t.shape[0]
+    h, d = cfg.n_heads, cfg.d_model
+    dh = d // h
+    c, n, hid, m = state
+    rec = jnp.einsum("bhd,hde->bhe", hid, p["r"])  # (B,H,4dh)
+    gates = (
+        jnp.einsum("bd,dg->bg", x_t, p["w_in"]).reshape(b, h, 4 * dh)
+        + rec
+        + p["b"].reshape(1, 4, h, dh).transpose(0, 2, 1, 3).reshape(1, h, 4 * dh)
+    )
+    z_r, i_r, f_r, o_r = jnp.split(gates, 4, axis=-1)  # (B,H,dh) each
+    log_f = jax.nn.log_sigmoid(f_r)
+    i_r = jnp.minimum(i_r, GATE_CLIP)
+    m_new = jnp.maximum(log_f + m, i_r)
+    i_g = jnp.exp(i_r - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(z_r)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_init_state(cfg, batch: int):
+    h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    zeros = jnp.zeros((batch, h, dh), jnp.float32)
+    return (zeros, zeros, zeros, zeros)
+
+
+def slstm_forward(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """Sequential sLSTM + gated MLP.  x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32)
+
+    def step(state, x_t):
+        return _slstm_cell(cfg, p, state, x_t)
+
+    _, hs = jax.lax.scan(step, slstm_init_state(cfg, b), jnp.moveaxis(xf, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    up = jnp.einsum("bsd,de->bse", y, p["w_up"])
+    g, u = jnp.split(up, 2, axis=-1)
+    return jnp.einsum("bse,ed->bsd", jax.nn.gelu(g, approximate=True) * u, p["w_down"])
+
+
+def slstm_step(cfg, p: dict, state, x: jax.Array):
+    """Single decode step.  x: (B, 1, d)."""
+    state, h_new = _slstm_cell(cfg, p, state, x[:, 0].astype(jnp.float32))
+    b = x.shape[0]
+    y = h_new.reshape(b, 1, cfg.d_model).astype(x.dtype)
+    up = jnp.einsum("bsd,de->bse", y, p["w_up"])
+    g, u = jnp.split(up, 2, axis=-1)
+    out = jnp.einsum("bse,ed->bsd", jax.nn.gelu(g, approximate=True) * u, p["w_down"])
+    return state, out

@@ -1,0 +1,88 @@
+"""Fault-tolerant checkpointing: atomic, versioned, resumable.
+
+Train state is flattened to numpy arrays and written ``tmp -> fsync ->
+rename`` so a crash mid-save never corrupts the latest checkpoint; a STEP
+pointer names the newest complete version.  Restore rebuilds the exact
+pytree (structure comes from a treedef JSON).  This is the TPU analogue of
+SEIFER's NFS store: state survives any worker's death.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.store import ArtifactStore
+
+
+def _to_np(x) -> np.ndarray:
+    """npz-safe array: bf16 (and friends) stored as a uint16/uint8 view."""
+    a = np.asarray(x)
+    if a.dtype.kind == "V" or a.dtype.name.startswith(("bfloat16", "float8")):
+        return a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
+    return a
+
+
+def _from_np(a: np.ndarray, dtype) -> "jnp.ndarray":
+    dt = jnp.dtype(dtype)
+    if a.dtype != dt and a.dtype.kind == "u" and a.dtype.itemsize == dt.itemsize:
+        a = a.view(dt)  # stored as a raw view (bf16/f8)
+    return jnp.asarray(a, dtype=dt)
+
+
+def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return {f"leaf_{i:05d}": _to_np(x) for i, x in enumerate(leaves)}, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.store = ArtifactStore(directory)
+        self.keep = keep
+
+    def save(self, step: int, state: Any) -> None:
+        arrays, treedef = _flatten(state)
+        self.store.put_arrays(step, "state", arrays)
+        self.store.put_json(step, "meta", {
+            "step": step,
+            "treedef": str(treedef),
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        })
+        self.store.publish(step)
+        self._gc()
+
+    def latest_step(self) -> int:
+        return self.store.current_version()
+
+    def restore(self, like: Any, step: int | None = None) -> tuple[int, Any]:
+        """Restore into the structure of ``like`` (shape/dtype template)."""
+        step = self.latest_step() if step is None else step
+        if step < 0:
+            raise FileNotFoundError("no checkpoint found")
+        arrays = self.store.get_arrays(step, "state")
+        leaves, treedef = jax.tree.flatten(like)
+        if len(arrays) != len(leaves):
+            raise ValueError(
+                f"checkpoint has {len(arrays)} leaves, template has {len(leaves)}"
+            )
+        restored = [
+            _from_np(arrays[f"leaf_{i:05d}"], l.dtype) for i, l in enumerate(leaves)
+        ]
+        return step, jax.tree.unflatten(treedef, restored)
+
+    def _gc(self) -> None:
+        vdirs = sorted(
+            (d for d in self.store.root.iterdir() if re.match(r"v\d{6}", d.name)),
+            key=lambda d: d.name,
+        )
+        for d in vdirs[: -self.keep]:
+            for f in d.iterdir():
+                f.unlink()
+            d.rmdir()

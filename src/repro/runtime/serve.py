@@ -1,0 +1,40 @@
+"""Serving steps: prefill (full-sequence logits) and decode (one token).
+
+``make_prefill_step`` / ``make_serve_step`` build the jit-able functions the
+dry-run lowers and the serving loop (`runtime/engine.py`) drives.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.common import NO_SHARDING
+
+
+def make_prefill_step(cfg, policy=NO_SHARDING):
+    """(params, batch) -> last-position logits (B, V)."""
+
+    def prefill_step(params, batch):
+        hidden, _ = lm.forward_hidden(cfg, params, batch, policy=policy, remat=False)
+        last = hidden[:, -1]
+        logits = jnp.einsum(
+            "bd,dv->bv", last, lm.lm_head_matrix(cfg, params)
+        ).astype(jnp.float32)
+        if cfg.final_softcap > 0:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg, policy=NO_SHARDING, *, enc_len: int = 0):
+    """(params, caches, tokens (B,1)) -> (next_token (B,1), caches')."""
+
+    def serve_step(params, caches, tokens):
+        logits, caches = lm.decode_step(cfg, params, caches, tokens, enc_len=enc_len)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, caches
+
+    return serve_step

@@ -1,0 +1,138 @@
+"""Training loop substrate: AdamW, grad clipping, LR schedule, microbatching.
+
+Optimizer moments are stored in ``cfg.opt_state_dtype`` (bf16 for the 1T MoE
+-- fp32 m/v for 1T params cannot fit 512 x 16 GB); all update math is fp32.
+``make_train_step`` builds the jit-able step the dry-run lowers; the update
+is fully shardable (moments follow the parameter shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.common import NO_SHARDING
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    microbatch: int = 0  # 0 = no gradient accumulation
+    accum_dtype: str = "float32"  # bf16 for the 1T MoE (HBM: grads = params)
+
+
+def init_state(cfg, params: Any) -> dict:
+    dt = jnp.dtype(cfg.opt_state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "params": params,
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def _lr_at(opt: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(opt.warmup_steps, 1), 1.0)
+    return opt.lr * warm
+
+
+def adamw_update(cfg, opt: OptConfig, state: dict, grads: Any) -> dict:
+    step = state["step"] + 1
+    lr = _lr_at(opt, step)
+    b1, b2 = opt.b1, opt.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    dt = jnp.dtype(cfg.opt_state_dtype)
+
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, opt.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m32 / c1
+        vhat = v32 / c2
+        step_ = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * p.astype(jnp.float32)
+        return (
+            (p.astype(jnp.float32) - lr * step_).astype(p.dtype),
+            m32.astype(dt),
+            v32.astype(dt),
+        )
+
+    out = jax.tree.map(upd, state["params"], grads, state["m"], state["v"])
+    params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return {"params": params, "m": m, "v": v, "step": step}
+
+
+def make_train_step(cfg, opt: OptConfig | None = None, policy=NO_SHARDING) -> Callable:
+    """(state, batch) -> (state', metrics).  Microbatched when configured."""
+    opt = opt or OptConfig()
+
+    def loss_of(params, batch):
+        return lm.loss_fn(cfg, params, batch, policy=policy)
+
+    def train_step(state, batch):
+        if opt.microbatch and opt.microbatch < _batch_dim(batch):
+            grads, (loss, parts) = _accumulated_grads(
+                loss_of, state["params"], batch, opt.microbatch,
+                jnp.dtype(opt.accum_dtype),
+            )
+        else:
+            (loss, parts), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                state["params"], batch
+            )
+        new_state = adamw_update(cfg, opt, state, grads)
+        metrics = {
+            "loss": loss,
+            "xent": parts["xent"],
+            "aux": parts["aux"],
+            "grad_norm": _global_norm(grads),
+        }
+        return new_state, metrics
+
+    return train_step
+
+
+def _batch_dim(batch) -> int:
+    return jax.tree.leaves(batch)[0].shape[0]
+
+
+def _accumulated_grads(loss_of, params, batch, micro: int, accum_dtype=jnp.float32):
+    """Gradient accumulation over batch slices (sequential, scan-based)."""
+    b = _batch_dim(batch)
+    n = b // micro
+    sliced = jax.tree.map(lambda x: x.reshape((n, micro) + x.shape[1:]), batch)
+
+    def step(carry, mb):
+        g_acc, l_acc, x_acc, a_acc = carry
+        (loss, parts), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+        g_acc = jax.tree.map(
+            lambda a, b_: a + (b_.astype(jnp.float32) / n).astype(accum_dtype), g_acc, g
+        )
+        return (g_acc, l_acc + loss / n, x_acc + parts["xent"] / n, a_acc + parts["aux"] / n), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+    (grads, loss, xent, aux), _ = jax.lax.scan(
+        step, (g0, jnp.float32(0), jnp.float32(0), jnp.float32(0)), sliced
+    )
+    return grads, (loss, {"xent": xent, "aux": aux})

@@ -1,0 +1,17 @@
+from repro.sharding.policy import (
+    ShardingPolicy,
+    batch_axes,
+    batch_pspec,
+    cache_shardings,
+    param_shardings,
+    state_shardings,
+)
+
+__all__ = [
+    "ShardingPolicy",
+    "batch_axes",
+    "batch_pspec",
+    "cache_shardings",
+    "param_shardings",
+    "state_shardings",
+]

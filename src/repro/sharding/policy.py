@@ -1,0 +1,265 @@
+"""PartitionSpec policies: TP / FSDP / EP over the production mesh.
+
+Rules are path+shape based so they apply uniformly to the scan-stacked
+parameter pytrees (leading group axes are padded with ``None``).  Every rule
+checks divisibility against the actual mesh axis size and falls back to
+replication, so the same policy lowers on the (16, 16) pod mesh, the
+(2, 16, 16) multi-pod mesh, and the 1-device test mesh.
+
+Axis convention:
+  * "data"  -- batch / fsdp axis,
+  * "model" -- tensor/expert-parallel axis,
+  * "pod"   -- data-parallel across pods (DCN); also a storage axis for the
+    1T MoE (fsdp_full shards expert d_ff over it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_pspec(mesh: Mesh, batch: int) -> P:
+    """Shard the batch dim over as many batch axes as divide it."""
+    axes = []
+    div = 1
+    for a in batch_axes(mesh):
+        n = _axis(mesh, a)
+        if batch % (div * n) == 0:
+            axes.append(a)
+            div *= n
+    return P(tuple(axes) if axes else None)
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings
+# ---------------------------------------------------------------------------
+
+def _div(n: int, mesh: Mesh, axis: str | None):
+    """axis if it divides n, else None (replicate)."""
+    if axis is None or n % _axis(mesh, axis) != 0:
+        return None
+    return axis
+
+
+@dataclasses.dataclass(frozen=True)
+class _Rules:
+    mesh: Mesh
+    fsdp: str | None  # "data" or None
+    pod: str | None  # "pod" for fsdp_full on the multi-pod mesh
+
+    def spec(self, cfg, path: str, shape: tuple[int, ...]) -> P:
+        """Trailing-dims PartitionSpec, padded for leading stack dims."""
+        name = path.split("/")[-1]
+        m = self.mesh
+        base = self._base(cfg, path, name, shape)
+        pad = len(shape) - len(base)
+        if pad < 0:  # scalar-ish leaf matched a bigger rule; replicate
+            return P()
+        return P(*([None] * pad + list(base)))
+
+    # -- the rule table ----------------------------------------------------
+    def _base(self, cfg, path: str, name: str, shape) -> list:
+        m, f, pod = self.mesh, self.fsdp, self.pod
+        moe = cfg.is_moe and "mlp" in path
+        if name == "embed":
+            return [_div(shape[-2], m, "model"), _div(shape[-1], m, f)]
+        if name == "lm_head":
+            return [_div(shape[-2], m, f), _div(shape[-1], m, "model")]
+        if name == "patch_proj":
+            return [None, _div(shape[-1], m, "model")]
+        if name in ("pos", "dec_pos"):
+            return [None, None]
+        attn_proj = "attn/" in path or "cross/" in path or "shared_attn/" in path
+        if name in ("wq", "wk", "wv") and attn_proj:
+            d, h, hd = shape[-3], shape[-2], shape[-1]
+            if _div(h, m, "model"):
+                return [_div(d, m, f), "model", None]
+            return [_div(d, m, f), None, _div(hd, m, "model")]
+        if name == "wo":
+            h, hd, d = shape[-3], shape[-2], shape[-1]
+            if _div(h, m, "model"):
+                return ["model", None, _div(d, m, f)]
+            return [None, _div(hd, m, "model"), _div(d, m, f)]
+        if name in ("bq", "bk", "bv"):
+            h, hd = shape[-2], shape[-1]
+            if _div(h, m, "model"):
+                return ["model", None]
+            return [None, _div(hd, m, "model")]
+        if name == "router":
+            return [None, None]
+        if moe and name in ("w_gate", "w_up"):
+            e, d, ff = shape[-3], shape[-2], shape[-1]
+            return [_div(e, m, "model"), _div(d, m, f), _div(ff, m, pod)]
+        if moe and name == "w_down":
+            e, ff, d = shape[-3], shape[-2], shape[-1]
+            return [_div(e, m, "model"), _div(ff, m, pod), _div(d, m, f)]
+        if name in ("w_gate", "w_up"):  # dense gated MLP (d, ff)
+            return [_div(shape[-2], m, f), _div(shape[-1], m, "model")]
+        if name == "w_down":
+            return [_div(shape[-2], m, "model"), _div(shape[-1], m, f)]
+        if name == "in_proj":  # mamba (d, 2*d_in + 2N + H)
+            return [_div(shape[-2], m, f), _div(shape[-1], m, "model")]
+        if name == "conv_w":
+            return [None, _div(shape[-1], m, "model")]
+        if name == "conv_b":
+            return [_div(shape[-1], m, "model")]
+        if name == "norm_w":
+            return [_div(shape[-1], m, "model")]
+        if name == "out_proj":  # (d_in, d)
+            return [_div(shape[-2], m, "model"), _div(shape[-1], m, f)]
+        if name in ("wq", "wk", "wv", "w_ogate", "w_in"):  # mlstm/slstm (d, X)
+            return [_div(shape[-2], m, f), _div(shape[-1], m, "model")]
+        return [None] * min(len(shape), 1)  # norms, biases, gates: replicate
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _mk_rules(cfg, mesh: Mesh) -> _Rules:
+    fsdp = "data" if cfg.sharding in ("fsdp", "ep_fsdp", "fsdp_full") else None
+    pod = "pod" if (cfg.sharding == "fsdp_full" and "pod" in mesh.axis_names) else None
+    return _Rules(mesh=mesh, fsdp=fsdp, pod=pod)
+
+
+def param_shardings(cfg, mesh: Mesh, params: Any) -> Any:
+    """NamedSharding tree matching ``params`` (works on ShapeDtypeStructs)."""
+    rules = _mk_rules(cfg, mesh)
+
+    def leaf(path, x):
+        return NamedSharding(mesh, rules.spec(cfg, _path_str(path), x.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def state_shardings(cfg, mesh: Mesh, state: Any) -> Any:
+    """Train-state shardings: m/v follow params; step replicated."""
+    p = param_shardings(cfg, mesh, state["params"])
+    return {
+        "params": p,
+        "m": p,
+        "v": p,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings (decode)
+# ---------------------------------------------------------------------------
+
+def cache_shardings(cfg, mesh: Mesh, caches: Any, batch: int | None = None) -> Any:
+    """KV caches: batch over data axes, heads (or head_dim) over model."""
+    baxes = batch_pspec(mesh, batch if batch is not None else _first_batch_dim(caches))
+
+    def leaf(path, x):
+        p = _path_str(path)
+        name = p.split("/")[-1]
+        if name == "pos" or x.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = _cache_spec(cfg, mesh, p, x.shape, baxes)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, caches)
+
+
+def _first_batch_dim(caches) -> int:
+    # blocks/*/kv/k has shape (G, B, S, KH, hd); pos is scalar
+    for path, leaf in jax.tree_util.tree_leaves_with_path(caches):
+        if leaf.ndim >= 2:
+            return leaf.shape[1]
+    return 1
+
+
+def _cache_spec(cfg, mesh: Mesh, path: str, shape, bspec: P) -> P:
+    name = path.split("/")[-1]
+    b = bspec[0] if len(bspec) else None
+    if name in ("k", "v"):  # (G, B, S, KH, hd)
+        pad = len(shape) - 4
+        s, kh, hd = shape[-3], shape[-2], shape[-1]
+        # B=1 (long-context decode) leaves the data axis idle: split-KV over it
+        seq_ax = None if b is not None else _div(s, mesh, "data")
+        if _div(kh, mesh, "model"):
+            return P(*([None] * pad), b, seq_ax, "model", None)
+        if seq_ax and s % (_axis(mesh, "data") * _axis(mesh, "model")) == 0:
+            return P(*([None] * pad), b, ("data", "model"), None, None)
+        if _div(s, mesh, "model"):
+            # KV heads don't divide the model axis: shard the SEQUENCE dim
+            # instead (FlashDecoding-style split-KV).  Head-dim sharding is
+            # strictly worse: it partial-sums f32 logits every layer (SPerf
+            # llama decode iteration).
+            return P(*([None] * pad), b, "model", None, None)
+        return P(*([None] * pad), b, None, None, _div(hd, mesh, "model"))
+    if name == "ssm":  # (G, per, B, H, dh, N)
+        pad = len(shape) - 4
+        return P(*([None] * pad), b, _div(shape[-3], mesh, "model"), None, None)
+    if name == "conv":  # (G, per, B, K-1, conv_dim)
+        pad = len(shape) - 3
+        return P(*([None] * pad), b, None, _div(shape[-1], mesh, "model"))
+    if name == "c":  # mlstm (G, per, B, H, dh+1, dh)
+        pad = len(shape) - 4
+        return P(*([None] * pad), b, None, None, _div(shape[-1], mesh, "model"))
+    if "slstm" in path:  # tuple state leaves (G, B, H, dh)
+        pad = len(shape) - 3
+        return P(*([None] * pad), b, None, _div(shape[-1], mesh, "model"))
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# Activation policy hook
+# ---------------------------------------------------------------------------
+
+class ShardingPolicy:
+    """Injected into the model; constrains key activations on the mesh."""
+
+    def __init__(self, cfg, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.baxes = batch_axes(mesh)
+
+    def _b(self, n: int):
+        axes, div = [], 1
+        for a in self.baxes:
+            sz = _axis(self.mesh, a)
+            if n % (div * sz) == 0:
+                axes.append(a)
+                div *= sz
+        return tuple(axes) if axes else None
+
+    def act(self, x: jax.Array, kind: str) -> jax.Array:
+        m = self.mesh
+        if kind in ("attn_q", "attn_kv"):  # (B, S, H, hd)
+            h = x.shape[2]
+            spec = (
+                P(self._b(x.shape[0]), None, "model", None)
+                if h % _axis(m, "model") == 0
+                else P(self._b(x.shape[0]), None, None, None)
+            )
+        elif kind in ("mlp_out", "final_hidden"):  # (B, S, d)
+            spec = P(self._b(x.shape[0]), None, None)
+        elif kind == "logits":  # (B, C, V)
+            spec = P(self._b(x.shape[0]), None, "model")
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(m, spec))

@@ -1,0 +1,155 @@
+"""Kernel correctness: shape/dtype sweeps against the pure-jnp oracles.
+
+Covers the jnp blockwise flash attention (fwd + custom VJP), the Pallas TPU
+kernel in interpret mode, and the int8 quantize/dequantize pair."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention_tpu
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quantize.kernel import dequantize_int8_tpu, quantize_int8_tpu
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+
+
+def _qkv(b, sq, skv, h, kh, hd, dtype, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        jax.random.normal(k1, (b, sq, h, hd), dtype),
+        jax.random.normal(k2, (b, skv, kh, hd), dtype),
+        jax.random.normal(k3, (b, skv, kh, hd), dtype),
+    )
+
+
+SWEEP = [
+    # (b, sq, skv, h, kh, hd, causal, window, softcap, block, dtype)
+    (2, 512, 512, 4, 2, 64, True, 0, 0.0, 128, jnp.float32),
+    (1, 1024, 1024, 4, 4, 32, True, 0, 50.0, 256, jnp.float32),
+    (2, 512, 512, 4, 1, 64, True, 200, 0.0, 128, jnp.float32),
+    (2, 512, 512, 2, 2, 64, False, 0, 0.0, 128, jnp.float32),
+    (1, 256, 768, 2, 2, 64, False, 0, 0.0, 128, jnp.float32),
+    (1, 512, 512, 8, 2, 128, True, 0, 0.0, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", SWEEP)
+def test_flash_forward_matches_ref(case):
+    b, sq, skv, h, kh, hd, causal, window, softcap, block, dtype = case
+    q, k, v = _qkv(b, sq, skv, h, kh, hd, dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block=block)
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("case", SWEEP[:5])
+def test_flash_grads_match_ref(case):
+    b, sq, skv, h, kh, hd, causal, window, softcap, block, dtype = case
+    q, k, v = _qkv(b, sq, skv, h, kh, hd, jnp.float32)
+    kw = dict(causal=causal, window=window, softcap=softcap)
+    gf = jax.grad(lambda *a: (flash_attention(*a, block=block, **kw) ** 2).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda *a: (attention_ref(*a, **kw) ** 2).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gf, gr):
+        scale = max(1e-6, float(jnp.max(jnp.abs(b_))))
+        assert float(jnp.max(jnp.abs(a - b_))) / scale < 1e-4
+
+
+@pytest.mark.parametrize("case", SWEEP)
+def test_pallas_kernel_interpret_matches_ref(case):
+    b, sq, skv, h, kh, hd, causal, window, softcap, block, dtype = case
+    if sq != skv:
+        pytest.skip("TPU kernel grid assumes aligned q/kv blocks")
+    q, k, v = _qkv(b, sq, skv, h, kh, hd, dtype)
+    out = flash_attention_tpu(q, k, v, causal=causal, window=window,
+                              softcap=softcap, block_q=block, block_k=block,
+                              interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+@given(
+    rows=st.integers(1, 8),
+    dblocks=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_quantize_roundtrip_bounded(rows, dblocks, seed):
+    block = 128
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, dblocks * block), jnp.float32)
+    q, s = quantize_ref(x, block)
+    y = dequantize_ref(q, s, dtype=jnp.float32)
+    # symmetric int8: error <= scale/2 per element
+    bound = np.repeat(np.asarray(s), block, axis=-1) * 0.5 + 1e-9
+    assert np.all(np.abs(np.asarray(y - x)) <= bound)
+
+
+def test_quantize_pallas_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 64, 512), jnp.bfloat16)
+    q1, s1 = quantize_ref(x, 128)
+    q2, s2 = quantize_int8_tpu(x, block=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    y1 = dequantize_ref(q1, s1)
+    y2 = dequantize_int8_tpu(q2, s2, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(y1, np.float32), np.asarray(y2, np.float32), rtol=1e-2, atol=1e-2
+    )
+
+
+def test_quantize_scale_equivariance():
+    """quantize(a*x) has scales a*scale(x) and identical codes (property)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 256), jnp.float32)
+    q1, s1 = quantize_ref(x, 128)
+    q2, s2 = quantize_ref(4.0 * x, 128)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s2), 4.0 * np.asarray(s1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan (chunked SSD)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims", [(2, 256, 4, 64, 32, 64), (1, 512, 8, 64, 64, 128)])
+def test_ssd_pallas_matches_ref(dims):
+    from repro.kernels.ssm_scan.ops import ssd_chunked
+    from repro.kernels.ssm_scan.ref import ssd_ref
+
+    b, s, h, hd, n, q = dims
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    xs = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32) * 0.5
+    bm = jax.random.normal(ks[1], (b, s, n)) * 0.5
+    cm = jax.random.normal(ks[2], (b, s, n)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[4], (h,)) * 0.3)
+    y_ref, _ = ssd_ref(xs, bm, cm, dt, a, chunk=q)
+    y_pal = ssd_chunked(xs, bm, cm, dt, a, chunk=q, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal), atol=1e-5, rtol=1e-5)
+
+
+def test_ssd_chunk_invariance():
+    from repro.kernels.ssm_scan.ref import ssd_ref
+
+    b, s, h, hd, n = 1, 256, 2, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    xs = jax.random.normal(ks[0], (b, s, h, hd)) * 0.5
+    bm = jax.random.normal(ks[1], (b, s, n)) * 0.5
+    cm = jax.random.normal(ks[2], (b, s, n)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[4], (h,)) * 0.3)
+    y1, _ = ssd_ref(xs, bm, cm, dt, a, chunk=32)
+    y2, _ = ssd_ref(xs, bm, cm, dt, a, chunk=256)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)

@@ -1,0 +1,153 @@
+"""Partitioner unit + property tests (DP vs exhaustive oracle)."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (
+    chain,
+    make_partitions,
+    partition_exact_k,
+    partition_exhaustive,
+    partition_min_bottleneck,
+    partition_min_sum,
+    partition_paper_greedy,
+)
+from repro.core.graph import Layer, LayerGraph
+
+
+def toy(sizes):
+    return chain("toy", sizes)
+
+
+class TestMakePartitions:
+    def test_no_cuts(self):
+        g = toy([(10, 5), (10, 5), (10, 5)])
+        parts = make_partitions(g, [])
+        assert len(parts) == 1
+        assert parts[0].param_bytes == 30
+        assert parts[0].out_bytes == 0
+
+    def test_cuts(self):
+        g = toy([(1, 100), (2, 200), (3, 300), (4, 400)])
+        parts = make_partitions(g, [0, 2])
+        assert [p.param_bytes for p in parts] == [1, 5, 4]
+        assert [p.out_bytes for p in parts] == [100, 300, 0]
+
+    def test_bad_cuts(self):
+        g = toy([(1, 1), (1, 1)])
+        with pytest.raises(ValueError):
+            make_partitions(g, [5])
+        with pytest.raises(ValueError):
+            make_partitions(g, [0, 0])
+
+
+class TestMinBottleneck:
+    def test_trivial_fit(self):
+        g = toy([(10, 99), (10, 99)])
+        r = partition_min_bottleneck(g, 100)
+        assert r.feasible and r.n_parts == 1 and r.max_cut_bytes == 0
+
+    def test_single_layer_too_big(self):
+        g = toy([(1000, 1), (10, 1)])
+        assert not partition_min_bottleneck(g, 100).feasible
+
+    def test_picks_cheap_edges(self):
+        # capacity forces >= 2 parts; edge 1 is the cheap cut
+        g = toy([(40, 100), (40, 1), (40, 100)])
+        r = partition_min_bottleneck(g, 80)
+        assert r.feasible and r.cuts == (1,) and r.max_cut_bytes == 1
+
+    def test_max_parts_respected(self):
+        g = toy([(50, 1)] * 6)
+        r = partition_min_bottleneck(g, 100, max_parts=3)
+        assert r.feasible and r.n_parts == 3
+        assert not partition_min_bottleneck(g, 100, max_parts=2).feasible
+
+    def test_capacity_exact_boundary(self):
+        g = toy([(50, 7), (50, 3)])
+        r = partition_min_bottleneck(g, 100)
+        assert r.feasible and r.n_parts == 1
+        r = partition_min_bottleneck(g, 99)
+        assert r.feasible and r.n_parts == 2 and r.max_cut_bytes == 7
+
+
+class TestExactK:
+    def test_matches_min_bottleneck_at_kmin(self):
+        g = toy([(30, 9), (30, 2), (30, 8), (30, 1), (30, 5)])
+        base = partition_min_bottleneck(g, 70)
+        r = partition_exact_k(g, 70, base.n_parts)
+        assert r.feasible and r.max_cut_bytes == base.max_cut_bytes
+
+    def test_infeasible_k(self):
+        g = toy([(10, 1)] * 3)
+        assert not partition_exact_k(g, 100, 5).feasible
+        assert not partition_exact_k(g, 100, 0).feasible
+
+
+SIZES = st.lists(
+    st.tuples(st.integers(1, 50), st.integers(1, 1000)), min_size=2, max_size=9
+)
+
+
+@settings(max_examples=120, deadline=None)
+@given(sizes=SIZES, cap=st.integers(10, 200))
+def test_min_bottleneck_matches_exhaustive(sizes, cap):
+    """The binary-search partitioner is exact: same min-max-cut as oracle."""
+    g = toy(sizes)
+    opt = partition_min_bottleneck(g, cap)
+    oracle = partition_exhaustive(g, cap)
+    assert opt.feasible == oracle.feasible
+    if opt.feasible:
+        assert opt.max_cut_bytes == oracle.max_cut_bytes
+        # every segment fits
+        assert all(p.param_bytes <= cap for p in opt.partitions)
+
+
+@settings(max_examples=120, deadline=None)
+@given(sizes=SIZES, cap=st.integers(10, 200))
+def test_greedy_never_beats_optimal_and_is_valid(sizes, cap):
+    g = toy(sizes)
+    greedy = partition_paper_greedy(g, cap)
+    opt = partition_min_bottleneck(g, cap)
+    if greedy.feasible:
+        assert all(p.param_bytes <= cap for p in greedy.partitions)
+        # partitions reconstruct the chain
+        assert greedy.partitions[0].start == 0
+        assert greedy.partitions[-1].stop == len(g)
+        for a, b in zip(greedy.partitions, greedy.partitions[1:]):
+            assert a.stop == b.start
+    if greedy.feasible and opt.feasible:
+        assert opt.max_cut_bytes <= greedy.max_cut_bytes
+
+
+@settings(max_examples=100, deadline=None)
+@given(sizes=SIZES, cap=st.integers(10, 200))
+def test_min_sum_bounded_by_minmax_total(sizes, cap):
+    """min_sum total <= min_bottleneck total (it optimizes the sum)."""
+    g = toy(sizes)
+    ms = partition_min_sum(g, cap)
+    mb = partition_min_bottleneck(g, cap)
+    assert ms.feasible == mb.feasible
+    if ms.feasible:
+        assert ms.total_cut_bytes <= mb.total_cut_bytes
+        assert all(p.param_bytes <= cap for p in ms.partitions)
+
+
+@settings(max_examples=60, deadline=None)
+@given(sizes=SIZES, cap=st.integers(20, 200), k=st.integers(1, 6))
+def test_exact_k_is_optimal_for_its_k(sizes, cap, k):
+    g = toy(sizes)
+    r = partition_exact_k(g, cap, k)
+    oracle = partition_exhaustive(g, cap, max_parts=k)
+    if r.feasible:
+        assert r.n_parts == k
+        # oracle minimizes over <= k parts, so oracle <= exact_k
+        assert oracle.feasible and oracle.max_cut_bytes <= r.max_cut_bytes
+
+
+def test_layer_validation():
+    with pytest.raises(ValueError):
+        Layer("x", -1, 0)
+    with pytest.raises(ValueError):
+        LayerGraph("empty", ())

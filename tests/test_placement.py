@@ -1,0 +1,211 @@
+"""Placement tests: exact DP vs brute force, color coding, invariants."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (
+    CommGraph,
+    place_brute_force,
+    place_color_coding,
+    place_greedy,
+    place_optimal,
+    place_random,
+    quantize_bandwidths,
+)
+
+
+def rand_comm(n, seed, capacity=100.0, p_drop=0.0):
+    rng = np.random.default_rng(seed)
+    bw = rng.uniform(0.5, 20.0, (n, n))
+    bw = (bw + bw.T) / 2
+    if p_drop:
+        drop = rng.random((n, n)) < p_drop
+        drop = drop | drop.T
+        bw = np.where(drop, 0.0, bw)
+    np.fill_diagonal(bw, 0.0)
+    return CommGraph.uniform(bw, capacity)
+
+
+class TestQuantize:
+    def test_one_class_flattens(self):
+        comm = rand_comm(5, 0)
+        q, vals = quantize_bandwidths(comm.bw, 1)
+        pos = q[comm.bw > 0]
+        assert len(vals) == 1
+        assert np.all(pos == pos[0])
+
+    def test_conservative(self):
+        comm = rand_comm(6, 1)
+        for c in (1, 2, 4, 8):
+            q, _ = quantize_bandwidths(comm.bw, c)
+            assert np.all(q <= comm.bw + 1e-12)
+            assert np.all((q > 0) == (comm.bw > 0))
+
+    def test_none_is_identity(self):
+        comm = rand_comm(4, 2)
+        q, _ = quantize_bandwidths(comm.bw, None)
+        np.testing.assert_array_equal(q, comm.bw)
+
+    def test_more_classes_tighter(self):
+        comm = rand_comm(8, 3)
+        q2, _ = quantize_bandwidths(comm.bw, 2)
+        q8, _ = quantize_bandwidths(comm.bw, 8)
+        # 8-class floors are >= 2-class floors on average (finer = tighter)
+        assert q8[comm.bw > 0].mean() >= q2[comm.bw > 0].mean() - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(3, 6),
+    k=st.integers(2, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_optimal_matches_brute_force(n, k, seed):
+    if k > n:
+        return
+    comm = rand_comm(n, seed)
+    rng = np.random.default_rng(seed + 1)
+    bounds = list(rng.uniform(1.0, 100.0, k - 1))
+    pb = [1.0] * k
+    opt = place_optimal(bounds, pb, comm)
+    bf = place_brute_force(bounds, pb, comm)
+    assert opt.feasible == bf.feasible
+    if opt.feasible:
+        assert opt.bottleneck_latency == pytest.approx(bf.bottleneck_latency)
+        assert len(set(opt.path)) == k  # simple path
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(4, 7), seed=st.integers(0, 10_000))
+def test_heuristics_never_beat_optimal(n, seed):
+    comm = rand_comm(n, seed)
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(2, n))
+    bounds = list(rng.uniform(1.0, 100.0, k - 1))
+    pb = [1.0] * k
+    opt = place_optimal(bounds, pb, comm)
+    for placer in (place_greedy, place_random):
+        h = placer(bounds, pb, comm)
+        if h.feasible and opt.feasible:
+            assert h.bottleneck_latency >= opt.bottleneck_latency - 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 7), seed=st.integers(0, 10_000))
+def test_color_coding_unquantized_equals_optimal_small_n(n, seed):
+    """With n <= exact_limit and no quantization, cc == optimal."""
+    comm = rand_comm(n, seed)
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(2, n))
+    bounds = list(rng.uniform(1.0, 100.0, k - 1))
+    pb = [1.0] * k
+    cc = place_color_coding(bounds, pb, comm, n_classes=None)
+    opt = place_optimal(bounds, pb, comm)
+    assert cc.feasible == opt.feasible
+    if cc.feasible:
+        assert cc.bottleneck_latency == pytest.approx(opt.bottleneck_latency)
+
+
+def test_quantization_only_hurts_or_ties():
+    """Solving on the quantized graph can't beat the unquantized optimum
+    (true-latency is reported either way)."""
+    for seed in range(8):
+        comm = rand_comm(7, seed)
+        bounds = [50.0, 20.0, 5.0]
+        pb = [1.0] * 4
+        opt = place_optimal(bounds, pb, comm)
+        for c in (1, 2, 4):
+            cc = place_color_coding(bounds, pb, comm, n_classes=c)
+            assert cc.feasible
+            assert cc.bottleneck_latency >= opt.bottleneck_latency - 1e-12
+
+
+def test_more_classes_monotone_on_average():
+    """The paper's Fig.3 trend: more bandwidth classes -> better placement."""
+    lats = {c: [] for c in (1, 2, 4, 8)}
+    for seed in range(20):
+        comm = rand_comm(9, seed)
+        rng = np.random.default_rng(seed)
+        bounds = list(rng.uniform(1.0, 100.0, 4))
+        pb = [1.0] * 5
+        for c in lats:
+            r = place_color_coding(bounds, pb, comm, n_classes=c)
+            assert r.feasible
+            lats[c].append(r.bottleneck_latency)
+    means = {c: np.mean(v) for c, v in lats.items()}
+    assert means[8] <= means[1] + 1e-12
+
+
+class TestColorCodingLargeN:
+    def test_finds_known_path(self):
+        # ring of 20 nodes with one golden high-bw path
+        n = 20
+        bw = np.full((n, n), 1.0)
+        np.fill_diagonal(bw, 0.0)
+        golden = [3, 7, 11, 15, 19]
+        for a, b in zip(golden, golden[1:]):
+            bw[a, b] = bw[b, a] = 100.0
+        comm = CommGraph.uniform(bw, 10.0)
+        bounds = [100.0] * 4
+        pb = [1.0] * 5
+        r = place_color_coding(
+            bounds, pb, comm, n_classes=None, exact_limit=4, trials=80, seed=0
+        )
+        assert r.feasible
+        assert r.bottleneck_latency == pytest.approx(1.0)  # golden path found
+
+    def test_capacity_constraints_respected(self):
+        n = 18
+        rng = np.random.default_rng(0)
+        bw = rng.uniform(1, 10, (n, n))
+        bw = (bw + bw.T) / 2
+        np.fill_diagonal(bw, 0)
+        cap = np.full(n, 0.5)
+        cap[[2, 5, 8, 11]] = 10.0  # only these can host
+        comm = CommGraph(bw=bw, node_capacity=cap)
+        r = place_color_coding(
+            [5.0, 3.0], [1.0] * 3, comm, n_classes=4, exact_limit=4, trials=60
+        )
+        assert r.feasible
+        assert set(r.path) <= {2, 5, 8, 11}
+
+
+class TestEdgeCases:
+    def test_k_greater_than_n(self):
+        comm = rand_comm(3, 0)
+        assert not place_optimal([1.0] * 4, [1.0] * 5, comm).feasible
+
+    def test_single_partition(self):
+        comm = rand_comm(4, 0)
+        r = place_optimal([], [1.0], comm)
+        assert r.feasible and len(r.path) == 1 and r.bottleneck_latency == 0.0
+        assert r.throughput == float("inf")
+
+    def test_disconnected_graph_infeasible(self):
+        bw = np.zeros((4, 4))
+        bw[0, 1] = bw[1, 0] = 5.0  # only one link
+        comm = CommGraph.uniform(bw, 10.0)
+        assert place_optimal([1.0, 1.0], [1.0] * 3, comm).feasible is False
+
+    def test_capacity_blocks_placement(self):
+        comm = rand_comm(4, 0, capacity=0.5)
+        assert not place_optimal([1.0], [1.0, 1.0], comm).feasible
+
+    def test_dispatcher_edges_counted(self):
+        bw = np.full((3, 3), 10.0)
+        np.fill_diagonal(bw, 0)
+        cap = np.array([-1.0, 10.0, 10.0])  # node 0 = dispatcher
+        comm = CommGraph(bw=bw, node_capacity=cap)
+        r = place_color_coding(
+            [10.0], [1.0, 1.0], comm, n_classes=None,
+            in_bytes=1000.0, dispatcher=0,
+        )
+        assert r.feasible
+        assert r.bottleneck_latency == pytest.approx(100.0)  # input edge dominates
+
+    def test_asymmetric_bw_rejected(self):
+        bw = np.array([[0.0, 1.0], [2.0, 0.0]])
+        with pytest.raises(ValueError):
+            CommGraph.uniform(bw, 1.0)

@@ -1,0 +1,84 @@
+"""Sharding-rule unit tests on a stubbed (16, 16) production mesh.
+
+The rules only read axis names/sizes, so a stub mesh exercises the exact
+divisibility logic the 256-chip dry run uses, without faking 256 devices."""
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.sharding import policy as pol
+
+
+class StubMesh:
+    def __init__(self, shape=(16, 16), axes=("data", "model")):
+        self.axis_names = axes
+        self.devices = np.empty(shape)
+
+
+MESH = StubMesh()
+MESH3 = StubMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _spec(cfg, path, shape, mesh=MESH):
+    return pol._mk_rules(cfg, mesh).spec(cfg, path, shape)
+
+
+def test_attention_heads_shard_when_divisible():
+    cfg = ARCHS["llama3.2-1b"]  # 32 heads / 16 = 2
+    s = _spec(cfg, "blocks/attn/wq", (16, 2048, 32, 64))
+    assert s == P(None, None, "model", None)
+
+
+def test_qwen_padded_heads_shard():
+    cfg = ARCHS["qwen2-7b"]  # 28 -> padded 32
+    assert cfg.padded_heads == 32
+    s = _spec(cfg, "blocks/attn/wq", (28, 3584, 32, 128))
+    assert s == P(None, None, "model", None)
+
+
+def test_indivisible_heads_fall_to_head_dim():
+    cfg = ARCHS["llama3.2-1b"]  # kv heads 8: not divisible by 16
+    s = _spec(cfg, "blocks/attn/wk", (16, 2048, 8, 64))
+    assert s == P(None, None, None, "model")  # hd = 64 = 16*4
+
+
+def test_moe_experts_shard_over_model():
+    cfg = ARCHS["kimi-k2-1t-a32b"]  # 384 experts, fsdp_full
+    s = _spec(cfg, "blocks/mlp/w_gate", (61, 384, 7168, 2048))
+    assert s[1] == "model" and s[2] == "data"  # E over model, d over data
+    s3 = _spec(cfg, "blocks/mlp/w_gate", (61, 384, 7168, 2048), MESH3)
+    assert s3[3] == "pod"  # f over pod on the multi-pod mesh
+
+
+def test_embed_vocab_shards():
+    cfg = ARCHS["gemma-2b"]  # vocab 256000 % 16 == 0
+    s = _spec(cfg, "embed", (256000, 2048))
+    assert s[0] == "model"
+
+
+def test_cache_split_kv_when_heads_indivisible():
+    cfg = ARCHS["llama3.2-1b"]
+    s = pol._cache_spec(cfg, MESH, "blocks/kv/k", (16, 128, 32768, 8, 64), P("data"))
+    assert s == P(None, "data", "model", None, None)  # seq over model
+
+
+def test_cache_heads_shard_when_divisible():
+    cfg = ARCHS["gemma2-27b"]  # 16 kv heads
+    s = pol._cache_spec(cfg, MESH, "blocks/global/k", (23, 128, 32768, 16, 128), P("data"))
+    assert s == P(None, "data", None, "model", None)
+
+
+def test_cache_batch_one_uses_data_axis_for_seq():
+    cfg = ARCHS["gemma2-27b"]
+    s = pol._cache_spec(cfg, MESH, "blocks/global/k", (23, 1, 524288, 16, 128), P(None))
+    assert s == P(None, None, "data", "model", None)  # SPerf D1
+
+
+def test_single_device_mesh_replicates_everything():
+    cfg = ARCHS["qwen2-7b"]
+    one = StubMesh((1, 1))
+    s = _spec(cfg, "blocks/attn/wq", (28, 3584, 32, 128), one)
+    assert all(ax in (None, "model", "data") for ax in s)
+    # axis size 1 divides everything; NamedSharding on 1 device is trivial
