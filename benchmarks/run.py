@@ -19,6 +19,7 @@ def main() -> int:
     from benchmarks import (
         algo_scaling,
         approx_ratio,
+        churn_throughput,
         fig3_bottleneck,
         joint_opt,
         kernel_bench,
@@ -34,6 +35,7 @@ def main() -> int:
         "joint_opt": lambda: joint_opt.run(trials=trials),
         "algo_scaling": algo_scaling.run,
         "kernels": kernel_bench.run,
+        "churn": lambda: churn_throughput.run(per_phase=8 if args.fast else 40),
     }
     failures = []
     for name, fn in benches.items():

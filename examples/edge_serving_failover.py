@@ -1,67 +1,95 @@
-"""End-to-end SEIFER lifecycle: init -> probe -> partition/place -> deploy ->
-serve -> node failure -> recover -> model-version update -> redeploy.
+"""End-to-end SEIFER lifecycle through the control plane's event API.
+
+bootstrap (elect -> probe -> partition/place -> deploy) -> serve a request
+stream -> node failure mid-stream -> reconcile (re-place) -> model-version
+update -> reconcile (in-place redeploy) -> node join -> reconcile (full
+cluster restart), with every convergence step driven by typed events --
+no manual ``Dispatcher.recover()`` calls.
 
     PYTHONPATH=src python examples/edge_serving_failover.py
+
+Expected output (paths/latencies vary slightly with placement seeds):
+
+    bootstrap: 4 partitions on nodes [4, 3, 5, 2], bottleneck 0.159 ms
+    served 8 requests, clock 0.107 ms
+    NodeFailed(3) -> [('replace', 're-placed 1 pod(s) off node 3')]
+    recovered: path [2, 5, 6, 1], outputs identical: True
+    VersionBumped(1) -> [('redeploy', 'in-place redeploy at v1')]
+    generation still 0 (no cluster restart on a version bump)
+    NodeJoined(new node 9) -> [('restart', 'full restart (gen 1) after node 9 joined')]
+    lifecycle complete: v1, generation 1, 0 lost requests
 """
 
 import tempfile
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.cluster import ArtifactStore, Dispatcher, EdgeCluster, ModelWatcher
-from repro.core.graph import chain
-from repro.core.simulate import random_cluster
+from repro.cluster import (
+    ArtifactStore,
+    ControlPlane,
+    EdgeCluster,
+    ModelWatcher,
+    NodeFailed,
+    NodeJoined,
+    ServingLoop,
+)
+from repro.core.model_zoo import demo_mlp
+from repro.core.simulate import expand_cluster, random_cluster
 
-# --- a real model: 8-layer MLP executed with jax ---------------------------
-D, LAYERS = 32, 8
-ws = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (LAYERS, D, D)) * 0.3)
+# --- a real model: an 8-layer tanh-MLP executed with jax, weights keyed by
+# model version so a VersionBumped redeploy visibly changes the function
+D = 32
+graph, executor_for_version = demo_mlp(d=D)
+capacity = graph.total_param_bytes / 3  # each node holds ~1/3 of the model
 
-
-def executor(start, stop, x):
-    for i in range(start, stop):  # partition [start, stop) == ws rows
-        x = jnp.tanh(x @ ws[i])
-    return x
-
-
-graph = chain("mlp8", [(D * D * 4, 16 * D * 4)] * LAYERS, in_bytes=16 * D * 4)
-
-# --- system initialization (Sec 2.1) ----------------------------------------
-cluster = EdgeCluster(random_cluster(8, graph.total_param_bytes / 3, seed=3),
-                      flops_per_s=1e9)
+# --- bootstrap: Sec 2.1 init + Sec 2.2 configuration, in one call ------------
+comm, positions = random_cluster(8, capacity, seed=3, with_positions=True)
+cluster = EdgeCluster(comm, flops_per_s=1e9)
 store = ArtifactStore(tempfile.mkdtemp(prefix="seifer-"))
-disp = Dispatcher(cluster, store, n_classes=4, seed=0)
-print(f"leader elected: node {disp.elect_leader()}")
-disp.probe_bandwidths()
+control = ControlPlane(
+    cluster, store, lambda v: graph, executor_for_version,
+    capacity=capacity, compression_ratio=2.0, seed=0,  # int8 boundaries
+)
+control.bootstrap(0)
+obs = control.observed()
+print(f"bootstrap: {len(obs.path)} partitions on nodes {list(obs.path)}, "
+      f"bottleneck {obs.bottleneck_latency*1e3:.3f} ms")
 
-# --- configuration step (Sec 2.2) -------------------------------------------
-plan = disp.configure(graph, version=0, capacity=graph.total_param_bytes / 3)
-print(f"plan: {plan.partition.n_parts} partitions on nodes {plan.placement.path}, "
-      f"bottleneck {plan.placement.bottleneck_latency*1e3:.3f} ms")
-pipe = disp.deploy(plan, executor, compression_ratio=2.0)  # int8 boundaries
+# --- inference step (Sec 2.3): request stream through the admission queue ----
+loop = ServingLoop(control, microbatch=4)
+for _ in range(8):
+    loop.submit(jnp.ones((D,)) * 0.1)
+loop.drain()
+y0 = loop.completed[0].result
+print(f"served {len(loop.completed)} requests, clock {loop.clock_s*1e3:.3f} ms")
 
-# --- inference step (Sec 2.3) -----------------------------------------------
-x = jnp.ones((4, D)) * 0.1
-y, trace = pipe.run(x)
-print(f"inference ok; period {trace.period_s*1e3:.3f} ms "
-      f"({1/trace.period_s:.0f} inf/s steady-state)")
+# --- node failure: the reconciler re-places partitions on healthy nodes ------
+victim = control.pipeline.pods[1].node_id
+control.submit(NodeFailed(victim))
+actions = control.reconcile()
+print(f"NodeFailed({victim}) -> {[(a.kind, a.detail) for a in actions]}")
+loop.submit(jnp.ones((D,)) * 0.1)
+loop.drain()
+identical = bool(jnp.allclose(y0, loop.completed[-1].result))
+assert identical, "recovered pipeline must compute identically"
+print(f"recovered: path {list(control.observed().path)}, outputs identical: {identical}")
 
-# --- node failure + recovery -------------------------------------------------
-victim = pipe.pods[1].node_id
-print(f"\nkilling node {victim} (hosts partition 1)...")
-cluster.fail(victim)
-pipe.mark_node_failed(victim)
-pipe = disp.recover(pipe, graph, version=0)
-y2, _ = pipe.run(x)
-assert bool(jnp.allclose(y, y2)), "recovered pipeline must compute identically"
-print(f"recovered: new path {pipe.path()}, outputs identical: True")
+# --- model-version update: watch container emits, reconciler redeploys -------
+watcher = ModelWatcher(store)
+store.publish(1)  # the external model repository pushes v1
+watcher.poll_events(control)
+actions = control.reconcile()
+print(f"VersionBumped(1) -> {[(a.kind, a.detail) for a in actions]}")
+assert control.generation == 0
+print("generation still 0 (no cluster restart on a version bump)")
 
-# --- model-version update (watch container) ----------------------------------
-store.publish(0)
-watcher = ModelWatcher(store, disp, graph_for_version=lambda v: graph)
-store.publish(1)  # external repo pushes v1
-pipe = watcher.poll(pipe, executor)
-print(f"\nmodel watch: redeployed at version {watcher.deployed_version}, "
-      f"path {pipe.path()}")
-print("lifecycle complete.")
+# --- node join: per the paper this is the one event needing a full restart ---
+grown, positions = expand_cluster(positions, capacity, seed=11)
+control.submit(NodeJoined(comm=grown))
+actions = control.reconcile()
+print(f"NodeJoined(new node {cluster.n - 1}) -> "
+      f"{[(a.kind, a.detail) for a in actions]}")
+
+obs = control.observed()
+print(f"lifecycle complete: v{obs.version}, generation {obs.generation}, "
+      f"{len(loop.failed)} lost requests")

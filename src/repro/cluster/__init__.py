@@ -1,14 +1,40 @@
-from repro.cluster.dispatcher import Dispatcher
+from repro.cluster.controlplane import (
+    ControlPlane,
+    DesiredState,
+    ObservedState,
+    ReconcileAction,
+)
+from repro.cluster.dispatcher import DeploymentPlan, Dispatcher
+from repro.cluster.events import (
+    ClusterEvent,
+    LinkDegraded,
+    NodeFailed,
+    NodeJoined,
+    VersionBumped,
+)
 from repro.cluster.lifecycle import EdgeCluster, InferencePipeline, Node, Pod
+from repro.cluster.serving import Request, ServingLoop
 from repro.cluster.store import ArtifactStore
 from repro.cluster.watch import ModelWatcher
 
 __all__ = [
     "ArtifactStore",
+    "ClusterEvent",
+    "ControlPlane",
+    "DeploymentPlan",
+    "DesiredState",
     "Dispatcher",
     "EdgeCluster",
     "InferencePipeline",
+    "LinkDegraded",
     "ModelWatcher",
     "Node",
+    "NodeFailed",
+    "NodeJoined",
+    "ObservedState",
     "Pod",
+    "ReconcileAction",
+    "Request",
+    "ServingLoop",
+    "VersionBumped",
 ]

@@ -56,6 +56,12 @@ class Dispatcher:
         self.probed: CommGraph | None = None
 
     # -- Sec 2.1: system initialization --------------------------------------
+    def reset(self) -> None:
+        """Forget leader + probed bandwidths (the paper's full cluster
+        restart, required when a node is *added*)."""
+        self.leader = None
+        self.probed = None
+
     def elect_leader(self) -> int:
         healthy = self.cluster.healthy_ids()
         if not healthy:
@@ -143,10 +149,27 @@ class Dispatcher:
         *,
         capacity: float | None = None,
     ) -> InferencePipeline:
+        """Manual recovery entry point.
+
+        Kept for direct use; the control plane drives the same mechanism via
+        ``replace_placement`` in response to ``NodeFailed`` events.
+        """
+        return self.replace_placement(pipeline, graph, version, capacity=capacity)
+
+    def replace_placement(
+        self,
+        pipeline: InferencePipeline,
+        graph: LayerGraph,
+        version: int,
+        *,
+        capacity: float | None = None,
+    ) -> InferencePipeline:
         """Re-place on the degraded cluster; restart dead pods from the store.
 
         The paper reschedules pods onto healthy nodes; partitions are reused
-        (their files live on NFS), only the placement is re-solved.
+        (their files live on NFS), only the placement is re-solved.  Falls
+        back to a full reconfigure when the surviving nodes cannot host the
+        existing partitions.
         """
         if self.leader is not None and not self.cluster.nodes[self.leader].healthy:
             self.elect_leader()  # leader itself died -> re-elect
@@ -159,6 +182,12 @@ class Dispatcher:
             comm,
             n_classes=self.n_classes,
             seed=int(self.rng.integers(1 << 31)),
+            # score the dispatcher round-trip like configure() does, so a
+            # recovery placement doesn't strand the first/last partition
+            # behind a dead-slow link to the leader
+            in_bytes=graph.in_bytes,
+            out_bytes=graph.layers[-1].out_bytes,
+            dispatcher=self.leader,
         )
         if not place.feasible:
             # partitions no longer fit the surviving nodes: full reconfigure

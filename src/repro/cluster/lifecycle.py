@@ -50,6 +50,34 @@ class EdgeCluster:
     def heal(self, node_id: int) -> None:
         self.nodes[node_id].healthy = True
 
+    def add_node(self, comm: CommGraph, flops_per_s: float | None = None) -> int:
+        """Grow the cluster by one node; ``comm`` is the expanded graph.
+
+        Existing nodes keep their ids and health state.  Returns the new
+        node's id.  Per the paper, a node *addition* forces a full cluster
+        restart -- that policy lives in the control plane, not here.
+        """
+        if comm.n != self.n + 1:
+            raise ValueError(f"expected a {self.n + 1}-node comm graph, got {comm.n}")
+        new_id = self.n
+        # keep the existing block (incl. any degraded links); adopt only the
+        # joining node's row/column and capacity from the expanded graph
+        bw = comm.bw.copy()
+        bw[:new_id, :new_id] = self.comm.bw
+        cap = np.append(self.comm.node_capacity, comm.node_capacity[new_id])
+        self.comm = CommGraph(bw=bw, node_capacity=cap)
+        if flops_per_s is None:
+            flops_per_s = self.nodes[-1].flops_per_s if self.nodes else 0.0
+        self.nodes.append(Node(new_id, cap[new_id], flops_per_s))
+        return new_id
+
+    def degrade_link(self, a: int, b: int, factor: float) -> None:
+        """Scale the true bandwidth of link (a, b) by ``factor`` (symmetric)."""
+        bw = self.comm.bw.copy()
+        bw[a, b] *= factor
+        bw[b, a] *= factor
+        self.comm = CommGraph(bw=bw, node_capacity=self.comm.node_capacity.copy())
+
     def degraded_comm(self) -> CommGraph:
         """CommGraph with failed nodes' capacity zeroed and links cut."""
         bw = self.comm.bw.copy()

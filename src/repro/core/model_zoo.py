@@ -160,3 +160,34 @@ PAPER_MODELS = {
     "inceptionv3": inceptionv3,
     "mobilenetv2": mobilenetv2,
 }
+
+
+def demo_mlp(d: int = 32, n_layers: int = 8):
+    """An *executable* demo model for the edge serving examples/benchmarks.
+
+    Returns ``(graph, executor_for_version)``: a tanh-MLP layer graph plus a
+    version -> ``ExecutorFn`` factory whose weights are keyed by the model
+    version (``PRNGKey(version)``), so a ``VersionBumped`` redeploy visibly
+    changes the served function.  jax is imported lazily to keep the CNN
+    zoo importable without it.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.graph import chain
+    from repro.runtime.pipeline import make_layer_executor
+
+    graph = chain(
+        f"mlp{n_layers}", [(d * d * 4, 16 * d * 4)] * n_layers, in_bytes=16 * d * 4
+    )
+
+    def executor_for_version(version: int):
+        ws = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(version), (n_layers, d, d)) * 0.3
+        )
+        return make_layer_executor(
+            [lambda x, w=ws[i]: jnp.tanh(x @ w) for i in range(n_layers)]
+        )
+
+    return graph, executor_for_version

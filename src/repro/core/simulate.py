@@ -48,22 +48,59 @@ def wireless_bandwidth_bps(dist_m: np.ndarray) -> np.ndarray:
     return np.where(snr_db >= MIN_SNR_DB, cap, 0.0)
 
 
+def cluster_from_positions(
+    pos: np.ndarray, capacity_bytes: float, dispatcher_idx: int | None = 0
+) -> CommGraph:
+    """Wireless CommGraph from (n, 2) node positions.
+
+    ``dispatcher_idx`` (if set) gets capacity -1: it hosts no partition,
+    matching the paper's dispatcher/compute-node split.
+    """
+    pos = np.asarray(pos, dtype=float)
+    d = np.linalg.norm(pos[:, None, :] - pos[None, :, :], axis=-1)
+    bw_bps = wireless_bandwidth_bps(d)
+    np.fill_diagonal(bw_bps, 0.0)
+    bw_bytes = bw_bps / 8.0
+    cap = np.full(len(pos), float(capacity_bytes))
+    if dispatcher_idx is not None:
+        cap[dispatcher_idx] = -1.0
+    return CommGraph(bw=bw_bytes, node_capacity=cap)
+
+
 def random_cluster(
     n_nodes: int,
     capacity_bytes: float,
     arena_m: float = 100.0,
     seed: int = 0,
-) -> CommGraph:
-    """n_nodes compute nodes + dispatcher (index 0), random positions."""
+    *,
+    with_positions: bool = False,
+) -> CommGraph | tuple[CommGraph, np.ndarray]:
+    """n_nodes compute nodes + dispatcher (index 0), random positions.
+
+    With ``with_positions=True`` also returns the (n+1, 2) position array so
+    the cluster can later be grown with ``expand_cluster`` (node-join churn).
+    """
     rng = np.random.default_rng(seed)
     pos = rng.uniform(0.0, arena_m, size=(n_nodes + 1, 2))
-    d = np.linalg.norm(pos[:, None, :] - pos[None, :, :], axis=-1)
-    bw_bps = wireless_bandwidth_bps(d)
-    np.fill_diagonal(bw_bps, 0.0)
-    bw_bytes = bw_bps / 8.0
-    cap = np.full(n_nodes + 1, float(capacity_bytes))
-    cap[0] = -1.0  # dispatcher hosts no partition
-    return CommGraph(bw=bw_bytes, node_capacity=cap)
+    comm = cluster_from_positions(pos, capacity_bytes)
+    return (comm, pos) if with_positions else comm
+
+
+def expand_cluster(
+    positions: np.ndarray,
+    capacity_bytes: float,
+    arena_m: float = 100.0,
+    seed: int = 0,
+) -> tuple[CommGraph, np.ndarray]:
+    """Add one node at a random position; bandwidths re-derived from geometry.
+
+    Existing pairwise links are unchanged (same positions -> same distances),
+    so the result is valid for ``EdgeCluster.add_node``.  Returns the grown
+    CommGraph and the grown position array.
+    """
+    rng = np.random.default_rng(seed)
+    new_pos = np.vstack([positions, rng.uniform(0.0, arena_m, size=(1, 2))])
+    return cluster_from_positions(new_pos, capacity_bytes), new_pos
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,12 @@
 """Serving CLI driver: prefill-style prompt consumption + decode loop.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --tokens 16
+
+Edge mode serves a request stream through the simulated edge cluster's
+control plane instead of the local accelerator, reporting the reconcile
+actions taken under a scripted node failure:
+
+  PYTHONPATH=src python -m repro.launch.serve --edge --requests 32
 """
 
 from __future__ import annotations
@@ -16,14 +22,68 @@ from repro.models import lm
 from repro.runtime.serve import make_serve_step
 
 
+def serve_edge(requests: int, nodes: int, seed: int) -> int:
+    """Edge-cluster serving demo: bootstrap -> stream -> kill -> recover."""
+    import tempfile
+
+    from repro.cluster import (
+        ArtifactStore, ControlPlane, EdgeCluster, NodeFailed, ServingLoop,
+    )
+    from repro.core.model_zoo import demo_mlp
+    from repro.core.simulate import random_cluster
+
+    d = 32
+    graph, executor_for_version = demo_mlp(d=d)
+    capacity = graph.total_param_bytes / 3
+
+    cluster = EdgeCluster(random_cluster(nodes, capacity, seed=seed + 3),
+                          flops_per_s=1e9)
+    control = ControlPlane(
+        cluster, ArtifactStore(tempfile.mkdtemp(prefix="seifer-serve-")),
+        lambda v: graph, executor_for_version, capacity=capacity, seed=seed,
+    )
+    control.bootstrap(0)
+    obs = control.observed()
+    print(f"edge serving: {len(obs.path)} partitions on nodes {list(obs.path)}, "
+          f"bottleneck {obs.bottleneck_latency*1e3:.3f} ms")
+    loop = ServingLoop(control, microbatch=4)
+    for _ in range(requests):
+        loop.submit(jnp.ones((d,)) * 0.1)
+    half = requests // 2
+    killed = half == 0  # nothing to kill mid-stream on a tiny run
+    while loop.backlog or control.pending:
+        if not killed and len(loop.completed) >= half:
+            victim = control.pipeline.pods[1].node_id
+            print(f"killing node {victim} mid-stream...")
+            control.submit(NodeFailed(victim))
+            killed = True
+        loop.step()
+    obs = control.observed()
+    print(f"served {len(loop.completed)}/{requests} requests "
+          f"(lost {len(loop.failed)}) in {loop.clock_s:.3f} simulated s; "
+          f"final path {list(obs.path)}, "
+          f"actions: {[a.kind for a in control.history]}")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--edge", action="store_true",
+                    help="serve through the simulated edge control plane")
+    ap.add_argument("--requests", type=int, default=32, help="edge mode stream size")
+    ap.add_argument("--nodes", type=int, default=8, help="edge mode cluster size")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.edge:
+        return serve_edge(args.requests, args.nodes, args.seed)
+    if not args.arch:
+        ap.error("--arch is required unless --edge is given")
 
     cfg = get_config(args.arch)
     if not args.full:

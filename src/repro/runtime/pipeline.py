@@ -165,6 +165,28 @@ def make_gpipe(
     return run
 
 
+# ---------------------------------------------------------------------------
+# Edge-cluster bridge: run the same stage execution through simulated pods
+# ---------------------------------------------------------------------------
+
+def make_layer_executor(layer_fns: list[Callable[[jax.Array], jax.Array]]):
+    """Adapt per-layer callables into the cluster ``ExecutorFn`` signature.
+
+    The edge control plane's ``InferencePipeline`` drives pods with
+    ``executor(start, stop, x)`` over the partition's layer range -- this is
+    the bridge that lets the TPU-side stage functions (or any per-layer jnp
+    closures) serve through the simulated pod chain, so the serving loop's
+    microbatches exercise identical math on both backends.
+    """
+
+    def executor(start: int, stop: int, x):
+        for i in range(start, stop):
+            x = layer_fns[i](x)
+        return x
+
+    return executor
+
+
 def reorder_stage_params(stage_params: Any, plan: PipelinePlan) -> Any:
     """Permute logically-ordered stage params into mesh order.
 

@@ -1,0 +1,85 @@
+"""Hypothesis shim: use the real library when installed, else a deterministic
+fallback so the property tests still exercise a fixed sample of inputs.
+
+``hypothesis`` is an *optional* test dependency (see requirements.txt).  The
+fallback implements exactly the strategy surface these tests use --
+``integers``, ``tuples``, ``lists`` -- and replays a fixed number of examples
+drawn from a per-test seeded PRNG, so runs are reproducible and the suite
+collects (and passes) on a bare interpreter.
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_MAX_EXAMPLES = 15  # cap: fallback trades coverage for speed
+
+    class _Strategy:
+        """A sampler: draw(rng) -> value.  Mirrors the hypothesis API shape."""
+
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rng: [
+                    elements.draw(rng)
+                    for _ in range(rng.randint(min_size, max_size))
+                ]
+            )
+
+    st = _Strategies()
+
+    def settings(max_examples=20, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                limit = getattr(
+                    wrapper, "_max_examples", getattr(fn, "_max_examples", 20)
+                )
+                n = min(limit, _FALLBACK_MAX_EXAMPLES)
+                base = zlib.crc32(fn.__qualname__.encode())
+                for example in range(n):
+                    rng = random.Random(base + example)
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # noqa: BLE001 - re-raise with context
+                        raise AssertionError(
+                            f"falsifying example #{example}: {drawn!r}"
+                        ) from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

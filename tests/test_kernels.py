@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention.kernel import flash_attention_tpu
 from repro.kernels.flash_attention.ops import flash_attention
@@ -92,8 +92,9 @@ def test_quantize_roundtrip_bounded(rows, dblocks, seed):
     x = jax.random.normal(jax.random.PRNGKey(seed), (rows, dblocks * block), jnp.float32)
     q, s = quantize_ref(x, block)
     y = dequantize_ref(q, s, dtype=jnp.float32)
-    # symmetric int8: error <= scale/2 per element
-    bound = np.repeat(np.asarray(s), block, axis=-1) * 0.5 + 1e-9
+    # symmetric int8: error <= scale/2 per element (small f32 rounding slack:
+    # the exact bound can overshoot by ~3e-6 relative on unlucky draws)
+    bound = np.repeat(np.asarray(s), block, axis=-1) * 0.5 * (1 + 1e-4) + 1e-9
     assert np.all(np.abs(np.asarray(y - x)) <= bound)
 
 

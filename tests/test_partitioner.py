@@ -1,8 +1,8 @@
 """Partitioner unit + property tests (DP vs exhaustive oracle)."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     chain,

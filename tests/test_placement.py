@@ -1,9 +1,9 @@
 """Placement tests: exact DP vs brute force, color coding, invariants."""
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     CommGraph,
