@@ -10,9 +10,9 @@ from pathlib import Path
 RESULTS_DIR = Path(os.environ.get("BENCH_RESULTS", "results"))
 
 
-def save(name: str, payload) -> Path:
+def save(name: str, payload, prefix: str = "bench_") -> Path:
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-    path = RESULTS_DIR / f"bench_{name}.json"
+    path = RESULTS_DIR / f"{prefix}{name}.json"
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
     return path

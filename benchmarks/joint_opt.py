@@ -1,13 +1,15 @@
 """Paper Sec. 4 item 3: sequential (paper) vs joint partition+placement.
 
 The joint search walks the partition-count frontier and re-places each
-candidate; the benchmark quantifies the bottleneck-latency gap it closes."""
+candidate; the benchmark quantifies the bottleneck-latency gap it closes.
+Both optimizers are resolved by NAME through the strategy registry, so the
+comparison is exactly what a ``DeploymentSpec(joint=...)`` would deploy."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.joint import joint, sequential
+from repro.api import get_strategy
 from repro.core.model_zoo import PAPER_MODELS
 from repro.core.simulate import random_cluster
 
@@ -15,6 +17,8 @@ from benchmarks.common import save, table
 
 
 def run(trials: int = 16, n_nodes: int = 8, capacity_frac: float = 0.3, seed: int = 0) -> dict:
+    sequential = get_strategy("joint", "sequential")
+    joint = get_strategy("joint", "joint")
     rows = []
     for model, fn in PAPER_MODELS.items():
         graph = fn()
@@ -38,7 +42,12 @@ def run(trials: int = 16, n_nodes: int = 8, capacity_frac: float = 0.3, seed: in
                 "max_speedup_x": float(np.max(gains)),
                 "n": len(gains),
             })
-    payload = {"rows": rows, "n_nodes": n_nodes, "capacity_frac": capacity_frac}
+    payload = {
+        "rows": rows,
+        "strategies": {"baseline": sequential.name, "candidate": joint.name},
+        "n_nodes": n_nodes,
+        "capacity_frac": capacity_frac,
+    }
     save("joint_opt", payload)
     print(table(rows, ["model", "seq_mean_s", "joint_mean_s", "mean_speedup_x",
                        "max_speedup_x", "n"],

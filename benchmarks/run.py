@@ -1,6 +1,11 @@
 """Benchmark driver: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Besides each module's own stdout table, the driver persists every payload a
+benchmark returns as ``results/BENCH_<module>.json`` (throughput windows,
+bottleneck latencies, strategy names) so the perf trajectory is diffable
+across PRs instead of living only in CI logs.
 """
 
 from __future__ import annotations
@@ -8,6 +13,16 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+from pathlib import Path
+
+from benchmarks.common import save
+
+
+def _save_bench_artifact(module_name: str, payload) -> Path | None:
+    """Machine-readable per-PR artifact: results/BENCH_<module>.json."""
+    if not isinstance(payload, dict):
+        return None
+    return save(module_name, payload, prefix="BENCH_")
 
 
 def main() -> int:
@@ -29,30 +44,35 @@ def main() -> int:
     trials_fig3 = 4 if args.fast else 12
     trials = 6 if args.fast else 16
     benches = {
-        "fig3": lambda: fig3_bottleneck.run(trials=trials_fig3),
-        "throughput": lambda: throughput_scaling.run(trials=trials),
-        "approx_ratio": lambda: approx_ratio.run(trials=max(trials, 8)),
-        "joint_opt": lambda: joint_opt.run(trials=trials),
-        "algo_scaling": algo_scaling.run,
-        "kernels": kernel_bench.run,
-        "churn": lambda: churn_throughput.run(per_phase=8 if args.fast else 40),
+        # name -> (module basename for the BENCH_ artifact, runner)
+        "fig3": ("fig3_bottleneck", lambda: fig3_bottleneck.run(trials=trials_fig3)),
+        "throughput": ("throughput_scaling", lambda: throughput_scaling.run(trials=trials)),
+        "approx_ratio": ("approx_ratio", lambda: approx_ratio.run(trials=max(trials, 8))),
+        "joint_opt": ("joint_opt", lambda: joint_opt.run(trials=trials)),
+        "algo_scaling": ("algo_scaling", algo_scaling.run),
+        "kernels": ("kernel_bench", kernel_bench.run),
+        "churn": ("churn_throughput",
+                  lambda: churn_throughput.run(per_phase=8 if args.fast else 40)),
     }
     failures = []
-    for name, fn in benches.items():
+    for name, (module_name, fn) in benches.items():
         if args.only and name != args.only:
             continue
         print(f"\n### {name} ###", flush=True)
         t0 = time.time()
         try:
-            fn()
-            print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+            payload = fn()
+            artifact = _save_bench_artifact(module_name, payload)
+            suffix = f"; artifact {artifact}" if artifact else ""
+            print(f"[{name}] done in {time.time()-t0:.1f}s{suffix}", flush=True)
         except Exception as e:  # pragma: no cover
             failures.append((name, repr(e)))
             print(f"[{name}] FAILED: {e!r}", flush=True)
     if failures:
         print("\nFAILURES:", failures)
         return 1
-    print("\nall benchmarks complete; results under results/bench_*.json")
+    print("\nall benchmarks complete; results under results/ "
+          "(bench_*.json per module, BENCH_*.json per-PR artifacts)")
     return 0
 
 

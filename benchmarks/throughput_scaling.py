@@ -4,21 +4,39 @@
 Throughput (1/bottleneck) vs number of nodes, at fixed (small) node
 capacity, relative to the minimum-viable cluster.  Also reports the random-
 and greedy-placement baselines to isolate the algorithm's contribution.
+Every placer runs through the same ``Planner`` the deployment facade uses,
+resolved by registry name, so the comparison covers exactly the strategies
+a ``DeploymentSpec`` can name.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.api import Planner
 from repro.core.model_zoo import PAPER_MODELS
-from repro.core.simulate import run_trial
-from repro.core.placement import place_greedy, place_random
+from repro.core.simulate import random_cluster
 
 from benchmarks.common import save, table
+
+PLACERS = ("color_coding", "greedy", "random")
+
+
+def _trial_throughput(planner, graph, capacity, n, seed):
+    comm = random_cluster(n, capacity, seed=seed)
+    plan = planner.plan(
+        graph, comm, capacity=capacity, max_parts=n, seed=seed, dispatcher=0,
+    )
+    return plan.placement.throughput if plan.feasible else None
 
 
 def run(trials: int = 16, capacity_frac: float = 0.25, seed: int = 0) -> dict:
     node_counts = [3, 4, 6, 8, 10, 12]
+    planners = {
+        "color_coding": Planner(placer="color_coding", n_classes=8),
+        "greedy": Planner(placer="greedy", n_classes=4),
+        "random": Planner(placer="random", n_classes=4),
+    }
     rows = []
     for model, fn in PAPER_MODELS.items():
         graph = fn()
@@ -26,35 +44,40 @@ def run(trials: int = 16, capacity_frac: float = 0.25, seed: int = 0) -> dict:
         capacity = max(capacity_frac * graph.total_param_bytes, 1.05 * biggest)
         base_tp = None
         for n in node_counts:
-            tps, tps_greedy, tps_rand = [], [], []
+            tps = {name: [] for name in PLACERS}
             for t in range(trials):
-                r = run_trial(graph, capacity, n, 8, seed + 31 * t)
-                if r.feasible:
-                    tps.append(r.throughput)
-                rg = run_trial(graph, capacity, n, 4, seed + 31 * t, placer=place_greedy)
-                if rg.feasible:
-                    tps_greedy.append(rg.throughput)
-                rr = run_trial(graph, capacity, n, 4, seed + 31 * t, placer=place_random)
-                if rr.feasible:
-                    tps_rand.append(rr.throughput)
-            if not tps:
+                for name in PLACERS:
+                    tp = _trial_throughput(
+                        planners[name], graph, capacity, n, seed + 31 * t
+                    )
+                    if tp is not None:
+                        tps[name].append(tp)
+            if not tps["color_coding"]:
                 continue
-            tp = float(np.mean(tps))
+            tp = float(np.mean(tps["color_coding"]))
             if base_tp is None:
                 base_tp = tp
             rows.append({
                 "model": model, "nodes": n,
                 "throughput": tp,
                 "gain_pct": 100.0 * (tp / base_tp - 1.0),
-                "vs_greedy_x": tp / float(np.mean(tps_greedy)) if tps_greedy else float("nan"),
-                "vs_random_x": tp / float(np.mean(tps_rand)) if tps_rand else float("nan"),
+                "vs_greedy_x": tp / float(np.mean(tps["greedy"]))
+                if tps["greedy"] else float("nan"),
+                "vs_random_x": tp / float(np.mean(tps["random"]))
+                if tps["random"] else float("nan"),
             })
     claims = {}
     for model in PAPER_MODELS:
         gains = [r["gain_pct"] for r in rows if r["model"] == model]
         if gains:
             claims[model] = {"max_gain_pct": max(gains)}
-    payload = {"rows": rows, "claims": claims, "capacity_frac": capacity_frac, "trials": trials}
+    payload = {
+        "rows": rows,
+        "claims": claims,
+        "strategies": {"partitioner": "min_bottleneck", "placers": list(PLACERS)},
+        "capacity_frac": capacity_frac,
+        "trials": trials,
+    }
     save("throughput_scaling", payload)
     print(table(rows, ["model", "nodes", "throughput", "gain_pct", "vs_greedy_x", "vs_random_x"],
                 "Throughput vs cluster size (paper: up to +200%)"))

@@ -1,10 +1,11 @@
-"""End-to-end SEIFER lifecycle through the control plane's event API.
+"""End-to-end SEIFER lifecycle through the ``deploy(spec)`` facade.
 
-bootstrap (elect -> probe -> partition/place -> deploy) -> serve a request
-stream -> node failure mid-stream -> reconcile (re-place) -> model-version
-update -> reconcile (in-place redeploy) -> node join -> reconcile (full
-cluster restart), with every convergence step driven by typed events --
-no manual ``Dispatcher.recover()`` calls.
+One ``DeploymentSpec`` replaces the old six-object hand-wiring: ``deploy()``
+bootstraps (elect -> probe -> partition/place -> deploy), then the
+``Deployment`` serves a request stream, absorbs a node failure mid-stream
+(reconcile: re-place), an in-place model-version update, a strategy swap on
+the LIVE deployment (``replan``), and a node join (full cluster restart) --
+every convergence step driven by typed events.
 
     PYTHONPATH=src python examples/edge_serving_failover.py
 
@@ -16,80 +17,78 @@ Expected output (paths/latencies vary slightly with placement seeds):
     recovered: path [2, 5, 6, 1], outputs identical: True
     VersionBumped(1) -> [('redeploy', 'in-place redeploy at v1')]
     generation still 0 (no cluster restart on a version bump)
-    NodeJoined(new node 9) -> [('restart', 'full restart (gen 1) after node 9 joined')]
+    replan(placer='greedy') -> path [...], still v1, generation 0
+    NodeJoined(new node 9) -> [('restart', 'full restart (gen 1) ...')]
     lifecycle complete: v1, generation 1, 0 lost requests
 """
 
-import tempfile
-
 import jax.numpy as jnp
 
-from repro.cluster import (
-    ArtifactStore,
-    ControlPlane,
-    EdgeCluster,
-    ModelWatcher,
-    NodeFailed,
-    NodeJoined,
-    ServingLoop,
-)
+from repro.api import ClusterSpec, DeploymentSpec, deploy
+from repro.cluster import NodeFailed
 from repro.core.model_zoo import demo_mlp
-from repro.core.simulate import expand_cluster, random_cluster
 
-# --- a real model: an 8-layer tanh-MLP executed with jax, weights keyed by
-# model version so a VersionBumped redeploy visibly changes the function
+# --- the spec: an executable 8-layer tanh-MLP (weights keyed by model
+# version, so a VersionBumped redeploy visibly changes the function) on a
+# seeded random wireless cluster, int8 boundary compression ------------------
 D = 32
 graph, executor_for_version = demo_mlp(d=D)
-capacity = graph.total_param_bytes / 3  # each node holds ~1/3 of the model
+spec = DeploymentSpec(
+    model=graph,  # "demo_mlp" (zoo name) works too and brings its own executor
+    executor_for_version=executor_for_version,
+    cluster=ClusterSpec(
+        n_nodes=8, capacity_bytes=graph.total_param_bytes / 3, seed=3,
+    ),
+    compression_ratio=2.0,  # int8 boundaries
+    seed=0,
+    microbatch=4,
+)
 
 # --- bootstrap: Sec 2.1 init + Sec 2.2 configuration, in one call ------------
-comm, positions = random_cluster(8, capacity, seed=3, with_positions=True)
-cluster = EdgeCluster(comm, flops_per_s=1e9)
-store = ArtifactStore(tempfile.mkdtemp(prefix="seifer-"))
-control = ControlPlane(
-    cluster, store, lambda v: graph, executor_for_version,
-    capacity=capacity, compression_ratio=2.0, seed=0,  # int8 boundaries
-)
-control.bootstrap(0)
-obs = control.observed()
+d = deploy(spec)
+obs = d.observed()
 print(f"bootstrap: {len(obs.path)} partitions on nodes {list(obs.path)}, "
       f"bottleneck {obs.bottleneck_latency*1e3:.3f} ms")
 
 # --- inference step (Sec 2.3): request stream through the admission queue ----
-loop = ServingLoop(control, microbatch=4)
 for _ in range(8):
-    loop.submit(jnp.ones((D,)) * 0.1)
-loop.drain()
-y0 = loop.completed[0].result
-print(f"served {len(loop.completed)} requests, clock {loop.clock_s*1e3:.3f} ms")
+    d.submit(jnp.ones((D,)) * 0.1)
+d.drain()
+y0 = d.loop.completed[0].result
+print(f"served {len(d.loop.completed)} requests, clock {d.loop.clock_s*1e3:.3f} ms")
 
 # --- node failure: the reconciler re-places partitions on healthy nodes ------
-victim = control.pipeline.pods[1].node_id
-control.submit(NodeFailed(victim))
-actions = control.reconcile()
+victim = d.control.pipeline.pods[1].node_id
+d.inject(NodeFailed(victim))
+actions = d.reconcile()
 print(f"NodeFailed({victim}) -> {[(a.kind, a.detail) for a in actions]}")
-loop.submit(jnp.ones((D,)) * 0.1)
-loop.drain()
-identical = bool(jnp.allclose(y0, loop.completed[-1].result))
+d.submit(jnp.ones((D,)) * 0.1)
+d.drain()
+identical = bool(jnp.allclose(y0, d.loop.completed[-1].result))
 assert identical, "recovered pipeline must compute identically"
-print(f"recovered: path {list(control.observed().path)}, outputs identical: {identical}")
+print(f"recovered: path {list(d.observed().path)}, outputs identical: {identical}")
 
 # --- model-version update: watch container emits, reconciler redeploys -------
-watcher = ModelWatcher(store)
-store.publish(1)  # the external model repository pushes v1
-watcher.poll_events(control)
-actions = control.reconcile()
+d.store.publish(1)  # the external model repository pushes v1
+d.poll_model_updates()
+actions = d.reconcile()
 print(f"VersionBumped(1) -> {[(a.kind, a.detail) for a in actions]}")
-assert control.generation == 0
+assert d.control.generation == 0
 print("generation still 0 (no cluster restart on a version bump)")
 
+# --- strategy swap on the LIVE deployment: replan, no restart ----------------
+plan = d.replan(placer="greedy")
+obs = d.observed()
+print(f"replan(placer='greedy') -> path {list(obs.path)}, "
+      f"still v{obs.version}, generation {obs.generation}")
+assert dict(plan.strategies)["placer"] == "greedy"
+
 # --- node join: per the paper this is the one event needing a full restart ---
-grown, positions = expand_cluster(positions, capacity, seed=11)
-control.submit(NodeJoined(comm=grown))
-actions = control.reconcile()
-print(f"NodeJoined(new node {cluster.n - 1}) -> "
+d.grow_cluster(seed=11)
+actions = d.reconcile()
+print(f"NodeJoined(new node {d.cluster.n - 1}) -> "
       f"{[(a.kind, a.detail) for a in actions]}")
 
-obs = control.observed()
+obs = d.observed()
 print(f"lifecycle complete: v{obs.version}, generation {obs.generation}, "
-      f"{len(loop.failed)} lost requests")
+      f"{len(d.loop.failed)} lost requests")

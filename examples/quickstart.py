@@ -1,15 +1,20 @@
-"""Quickstart: partition a DNN and place it on a simulated edge cluster.
+"""Quickstart: declare a deployment spec, compile it into a plan.
 
-The two core SEIFER algorithms in isolation, no cluster machinery: cut a
-ResNet-50 layer graph into min-bottleneck partitions under a per-node
-memory cap (Sec. 2.2-1b), then place the partitions so the heaviest
-boundary rides the fastest wireless link (Sec. 2.2-1c), and score the
-resulting pipeline with and without boundary compression.
+The declarative API in one screen: describe the model, the cluster, and the
+strategies by NAME (``repro.api.list_strategies`` shows what's registered),
+then let the ``Planner`` run SEIFER's two steps -- min-bottleneck
+partitioning (Sec. 2.2-1b) and bandwidth-aware placement (Sec. 2.2-1c) --
+and score the result.  No cluster machinery; for serving + churn see
+``examples/edge_serving_failover.py`` (the ``deploy()`` facade).
 
     PYTHONPATH=src python examples/quickstart.py
 
 Expected output (exact numbers vary with the cluster seed):
 
+    registered strategies:
+      partitioner: min_bottleneck*, exact_k, exhaustive, min_sum, paper_greedy
+      placer: color_coding*, greedy, optimal, random
+      joint: sequential*, joint
     model: resnet50, 18 layers, 25.5 MB int8 weights
     partitions: 4, cuts at (12, 14, 15), max boundary 0.80 MB
     placement: nodes (2, 3, 5, 1), bottleneck 47.05 ms, throughput 21.3 inf/s
@@ -21,37 +26,47 @@ on a bandwidth-bound cluster, compression halves the period -- see
 ``benchmarks/fig3_bottleneck.py``.)
 """
 
-import numpy as np
-
-from repro.core import evaluate_pipeline, partition_min_bottleneck, place_color_coding
+from repro.api import (
+    ClusterSpec,
+    DeploymentSpec,
+    Planner,
+    default_strategy,
+    list_strategies,
+)
+from repro.core import evaluate_pipeline
 from repro.core.model_zoo import resnet50
-from repro.core.simulate import random_cluster
 
-# 1. the model, as a layer graph (params bytes / activation bytes / flops)
+# 0. every algorithm is a named, registered strategy (default marked *)
+print("registered strategies:")
+for kind in ("partitioner", "placer", "joint"):
+    names = [n + "*" if n == default_strategy(kind) else n
+             for n in list_strategies(kind)]
+    print(f"  {kind}: {', '.join(names)}")
+
+# 1. the spec: model + cluster + strategy names, declared up front
 graph = resnet50()
+capacity = graph.total_param_bytes / 3  # each node holds ~1/3 of the model
+spec = DeploymentSpec(
+    model="resnet50",  # zoo name; a LayerGraph works too
+    cluster=ClusterSpec(n_nodes=8, capacity_bytes=capacity, seed=0),
+    partitioner="min_bottleneck",  # SEIFER step 1 (Sec. 2.2-1b)
+    placer="color_coding",         # SEIFER step 2 (Sec. 2.2-1c)
+)
 print(f"model: {graph.name}, {len(graph)} layers, "
       f"{graph.total_param_bytes/1e6:.1f} MB int8 weights")
 
-# 2. a cluster: 8 edge nodes + dispatcher, WiFi bandwidths from positions
-capacity = graph.total_param_bytes / 3  # each node holds ~1/3 of the model
-comm = random_cluster(n_nodes=8, capacity_bytes=capacity, seed=0)
-
-# 3. SEIFER step 1 -- partition: min-bottleneck cuts under node memory
-part = partition_min_bottleneck(graph, int(capacity))
+# 2. compile: validate the spec, partition, place, predict metrics
+plan = Planner.from_spec(spec).compile(spec)
+part, place = plan.partition, plan.placement
 print(f"partitions: {part.n_parts}, cuts at {part.cuts}, "
       f"max boundary {part.max_cut_bytes/1e6:.2f} MB")
-
-# 4. SEIFER step 2 -- placement: heaviest boundaries on fastest links
-place = place_color_coding(
-    part.boundaries, [p.param_bytes for p in part.partitions], comm,
-    n_classes=4, dispatcher=0, in_bytes=graph.in_bytes,
-)
 print(f"placement: nodes {place.path}, "
       f"bottleneck {place.bottleneck_latency*1e3:.2f} ms, "
       f"throughput {place.throughput:.1f} inf/s")
 
-# 5. end-to-end metrics, with and without boundary compression (ZFP/LZ4
+# 3. end-to-end metrics, with and without boundary compression (ZFP/LZ4
 #    on the edge; blockwise int8 on TPU -- see kernels/quantize)
+comm, _ = spec.cluster.build()
 for ratio in (1.0, 2.0):
     m = evaluate_pipeline(part.partitions, place.path, comm,
                           device_flops=5e9, compression_ratio=ratio)

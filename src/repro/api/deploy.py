@@ -1,0 +1,234 @@
+"""``deploy(spec) -> Deployment``: the one-call serving facade.
+
+Before the declarative API, standing up a SEIFER deployment meant hand-wiring
+six objects (``LayerGraph`` -> ``EdgeCluster`` -> ``ArtifactStore`` ->
+``ControlPlane`` -> bootstrap -> ``ServingLoop``), repeated in every example
+and benchmark.  ``deploy()`` collapses that to one call: it validates the
+spec, materializes the cluster, bootstraps the control plane through the
+spec's strategies (Sec. 2.1-2.2: elect -> probe -> partition -> place ->
+deploy), and wraps serving + churn + strategy-swap behind a ``Deployment``:
+
+  * ``submit(x)`` / ``step()`` / ``drain()`` -- request-level serving,
+  * ``inject(event)`` / ``reconcile()``     -- churn + convergence (Sec. 2.3),
+  * ``replan(partitioner=..., placer=...)``  -- swap strategies on a LIVE
+    deployment (probed bandwidths and generation reused),
+  * ``metrics()``                            -- predicted vs. observed
+    bottleneck, serving counters, reconcile history.
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+from typing import Any
+
+import numpy as np
+
+from repro.api.planner import Plan, Planner
+from repro.api.spec import DeploymentSpec
+from repro.cluster.controlplane import ControlPlane, ObservedState, ReconcileAction
+from repro.cluster.events import ClusterEvent, NodeJoined
+from repro.cluster.lifecycle import EdgeCluster
+from repro.cluster.serving import Request, ServingLoop
+from repro.cluster.store import ArtifactStore
+from repro.cluster.watch import ModelWatcher
+
+
+def _passthrough_executor(start: int, stop: int, x):
+    """Timing-only serving: latency still comes from bytes/bandwidth+flops."""
+    return x
+
+
+def deploy(
+    spec: DeploymentSpec,
+    *,
+    store_root: str | None = None,
+    version: int = 0,
+    flops_per_s: float = 1e9,
+) -> "Deployment":
+    """Validate ``spec``, build the stack, bootstrap, return the facade.
+
+    Raises ``InfeasibleSpecError`` with structured reasons when the spec
+    cannot deploy (unknown strategy, layer over capacity, missed SLO, ...).
+    """
+    spec.check()
+    graph, model_executor = spec.resolve_model()
+    comm, positions = spec.cluster.build()
+    executor_for_version = (
+        spec.executor_for_version or model_executor or
+        (lambda v: _passthrough_executor)
+    )
+    cluster = EdgeCluster(comm, flops_per_s=flops_per_s)
+    store = ArtifactStore(
+        store_root if store_root is not None
+        else tempfile.mkdtemp(prefix="seifer-deploy-")
+    )
+    control = ControlPlane(
+        cluster, store,
+        lambda v: graph, executor_for_version,
+        planner=Planner.from_spec(spec),
+        capacity=spec.capacity, compression_ratio=spec.compression_ratio,
+        seed=spec.seed,
+    )
+    control.bootstrap(version)
+    dep = Deployment(spec, control, positions=positions)
+    dep._check_slos()
+    return dep
+
+
+class Deployment:
+    """A live deployment: serving loop + control plane + strategy registry.
+
+    Constructed by ``deploy()``; everything the five old wiring copies did by
+    hand is a method here.
+    """
+
+    def __init__(
+        self,
+        spec: DeploymentSpec,
+        control: ControlPlane,
+        *,
+        positions: np.ndarray | None = None,
+    ):
+        self.spec = spec
+        self.control = control
+        self.loop = ServingLoop(control, microbatch=spec.microbatch)
+        self.watcher = ModelWatcher(control.store)
+        self.positions = positions  # node positions for random clusters (growth)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def plan(self) -> Plan:
+        """The most recent feasible plan the control plane deployed."""
+        return self.control.last_plan
+
+    @property
+    def cluster(self) -> EdgeCluster:
+        return self.control.cluster
+
+    @property
+    def store(self) -> ArtifactStore:
+        return self.control.store
+
+    def observed(self) -> ObservedState:
+        return self.control.observed()
+
+    # -- serving -------------------------------------------------------------
+    def submit(self, x: Any) -> Request:
+        """Admit one inference request."""
+        return self.loop.submit(x)
+
+    def step(self) -> list[Request]:
+        """One admission round (reconciles pending events first)."""
+        return self.loop.step()
+
+    def drain(self, max_rounds: int = 10_000) -> list[Request]:
+        """Serve until the queue empties; returns the completed requests."""
+        return self.loop.drain(max_rounds=max_rounds)
+
+    # -- churn + convergence -------------------------------------------------
+    def inject(self, event: ClusterEvent) -> None:
+        """Enqueue a cluster disturbance; ``reconcile()`` converges on it."""
+        self.control.submit(event)
+
+    def reconcile(self) -> list[ReconcileAction]:
+        """Drain the event queue and converge observed -> desired state."""
+        return self.control.reconcile()
+
+    def poll_model_updates(self) -> bool:
+        """Watch tick: emit ``VersionBumped`` if the store moved past us."""
+        return self.watcher.poll_events(self.control)
+
+    def grow_cluster(self, seed: int = 0) -> NodeJoined:
+        """Convenience churn: add one random node (full-restart event).
+
+        Only available for random clusters (the spec kept the positions);
+        returns the injected ``NodeJoined`` event -- call ``reconcile()``
+        (or keep serving) to converge.
+        """
+        if self.positions is None:
+            raise RuntimeError(
+                "grow_cluster() needs a position-seeded random cluster; "
+                "inject NodeJoined(comm=...) yourself for explicit CommGraphs"
+            )
+        from repro.core.simulate import expand_cluster
+
+        arena = self.spec.cluster.arena_m
+        cap = self.spec.cluster.capacity_bytes
+        grown, self.positions = expand_cluster(self.positions, cap, arena, seed)
+        event = NodeJoined(comm=grown)
+        self.inject(event)
+        return event
+
+    # -- strategy swap -------------------------------------------------------
+    def replan(
+        self,
+        *,
+        partitioner: str | None = None,
+        placer: str | None = None,
+        joint: str | None = None,
+    ) -> Plan:
+        """Swap strategies on the live deployment and redeploy in place.
+
+        Unset kinds keep their current strategy, with one asymmetry: naming
+        a ``partitioner`` or ``placer`` switches a joint-optimized deployment
+        back to the two-step pipeline (a joint strategy *replaces* that
+        pipeline, so keeping it would make the swap a silent no-op).  The
+        running pipeline is only replaced if the new plan is feasible.
+        """
+        current = self.control.planner
+        if joint is not None:
+            new_joint = joint
+        elif partitioner is not None or placer is not None:
+            new_joint = None  # explicit pipeline strategies drop the joint
+        else:
+            new_joint = current.joint.name if current.joint else None
+        planner = Planner(
+            partitioner=partitioner or current.partitioner.name,
+            placer=placer or current.placer.name,
+            joint=new_joint,
+            n_classes=current.n_classes,
+            seed=current.seed,
+        )
+        return self.control.replan(planner)
+
+    # -- metrics -------------------------------------------------------------
+    def metrics(self) -> dict:
+        """Predicted vs. observed placement quality + serving counters."""
+        obs = self.observed()
+        plan = self.plan
+        out = {
+            "version": obs.version,
+            "generation": obs.generation,
+            "leader": obs.leader,
+            "path": list(obs.path),
+            "n_nodes": obs.n_nodes,
+            "healthy": obs.healthy,
+            "bottleneck_latency_s": obs.bottleneck_latency,
+            "strategies": dict(plan.strategies) if plan else {},
+            "predicted_bottleneck_s": plan.predicted_bottleneck_s if plan else None,
+            "predicted_throughput": plan.predicted_throughput if plan else None,
+            "reconcile_actions": [a.kind for a in self.control.history],
+            "serving": self.loop.metrics(),
+        }
+        return out
+
+    def _check_slos(self) -> None:
+        """SLOs re-checked on the as-deployed plan (probed bandwidths)."""
+        from repro.api.spec import InfeasibleSpecError
+
+        issues = self.plan.slo_issues(self.spec)
+        if issues:
+            raise InfeasibleSpecError(issues)
+
+
+# The function and this module share the name "deploy", and a prior
+# ``import repro.api.deploy`` binds the MODULE onto the package before the
+# package's lazy __getattr__ can pin the function -- so make the module
+# itself callable; either object a caller ends up with deploys the spec.
+class _CallableDeployModule(sys.modules[__name__].__class__):
+    def __call__(self, *args, **kwargs):
+        return deploy(*args, **kwargs)
+
+
+sys.modules[__name__].__class__ = _CallableDeployModule

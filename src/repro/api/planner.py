@@ -1,0 +1,275 @@
+"""``Planner``: compile a spec (or a raw graph + cluster) into a ``Plan``.
+
+The planner is the *policy-free* middle of the API: it resolves strategy
+names through the registry, runs partition -> placement (or a joint
+optimizer), and scores the result with the simulator's pipeline metrics --
+no cluster machinery, no pods.  ``Plan`` subsumes the old
+``dispatcher.DeploymentPlan`` (same ``version``/``partition``/``placement``
+fields, so ``Dispatcher.deploy`` consumes it unchanged) and adds the
+predicted bottleneck/throughput plus the strategy names that produced it.
+
+Strategy functions keep their natural signatures; the planner passes each
+one only the keyword arguments it accepts (``inspect.signature``-filtered),
+so e.g. ``place_greedy`` never sees ``n_classes`` and ``place_random``
+still gets its ``seed``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import TYPE_CHECKING
+
+from repro.api.registry import default_strategy, get_strategy
+from repro.core.bottleneck import evaluate_pipeline
+from repro.core.graph import LayerGraph
+from repro.core.partitioner import PartitionResult
+from repro.core.placement import CommGraph, PlacementResult
+
+if TYPE_CHECKING:
+    from repro.api.spec import DeploymentSpec, SpecIssue
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A compiled deployment: partition + placement + predicted metrics.
+
+    Drop-in for the old ``dispatcher.DeploymentPlan`` (which is now an alias
+    of this class): ``Dispatcher.deploy`` reads ``version``, ``partition``,
+    ``placement``, ``feasible``.
+    """
+
+    version: int
+    partition: PartitionResult
+    placement: PlacementResult
+    # the placement objective: max link latency on UNCOMPRESSED boundaries
+    predicted_bottleneck_s: float = float("inf")
+    # 1 / pipeline period, compression- and compute-aware (simulator metric)
+    predicted_throughput: float = 0.0
+    strategies: tuple[tuple[str, str], ...] = ()  # (kind, name) pairs
+
+    @property
+    def feasible(self) -> bool:
+        return self.partition.feasible and self.placement.feasible
+
+    @property
+    def n_parts(self) -> int:
+        return self.partition.n_parts
+
+    @property
+    def path(self) -> tuple[int, ...]:
+        return self.placement.path
+
+    def strategy(self, kind: str) -> str | None:
+        return dict(self.strategies).get(kind)
+
+    def slo_issues(self, spec: "DeploymentSpec") -> tuple["SpecIssue", ...]:
+        """Check the plan's predictions against the spec's SLOs."""
+        from repro.api.spec import SpecIssue
+
+        issues = []
+        if not self.feasible:
+            issues.append(SpecIssue(
+                "infeasible_plan",
+                f"{self.partition.algorithm}/{self.placement.algorithm} found "
+                f"no feasible partition+placement on this cluster",
+            ))
+            return tuple(issues)
+        if (spec.max_bottleneck_s is not None
+                and self.predicted_bottleneck_s > spec.max_bottleneck_s):
+            issues.append(SpecIssue(
+                "slo_bottleneck",
+                f"predicted bottleneck {self.predicted_bottleneck_s:.3e} s "
+                f"exceeds the max_bottleneck_s SLO {spec.max_bottleneck_s:.3e} s",
+            ))
+        if (spec.min_throughput is not None
+                and self.predicted_throughput < spec.min_throughput):
+            issues.append(SpecIssue(
+                "slo_throughput",
+                f"predicted throughput {self.predicted_throughput:.3e}/s is "
+                f"below the min_throughput SLO {spec.min_throughput:.3e}/s",
+            ))
+        return tuple(issues)
+
+    def summary(self) -> dict:
+        """JSON-ready description (stored by the dispatcher, logged by benches)."""
+        return {
+            "version": self.version,
+            "feasible": self.feasible,
+            "cuts": list(self.partition.cuts),
+            "path": list(self.placement.path),
+            "bottleneck_latency": self.placement.bottleneck_latency,
+            "predicted_bottleneck_s": self.predicted_bottleneck_s,
+            "predicted_throughput": self.predicted_throughput,
+            "algorithm": self.placement.algorithm,
+            "strategies": {k: v for k, v in self.strategies},
+        }
+
+
+def _filter_kwargs(fn, kwargs: dict) -> dict:
+    """Keep only the kwargs ``fn``'s signature accepts."""
+    params = inspect.signature(fn).parameters
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return kwargs
+    return {k: v for k, v in kwargs.items() if k in params}
+
+
+class Planner:
+    """Resolve strategy names once; compile graphs + clusters into ``Plan``s.
+
+    One planner instance is shared by a ``Dispatcher``/``ControlPlane`` and
+    reused across reconfigurations; per-call ``seed`` overrides keep the
+    dispatcher's probe-noise RNG stream in charge of placement randomness
+    (exactly the pre-API behavior, which the parity regression test pins).
+    """
+
+    def __init__(
+        self,
+        partitioner: str | None = None,
+        placer: str | None = None,
+        joint: str | None = None,
+        *,
+        n_classes: int | None = 4,
+        seed: int = 0,
+    ):
+        self.partitioner = get_strategy(
+            "partitioner", partitioner or default_strategy("partitioner"))
+        self.placer = get_strategy("placer", placer or default_strategy("placer"))
+        self.joint = get_strategy("joint", joint) if joint is not None else None
+        self.n_classes = n_classes
+        self.seed = seed
+
+    @classmethod
+    def from_spec(cls, spec: "DeploymentSpec") -> "Planner":
+        return cls(
+            partitioner=spec.partitioner,
+            placer=spec.placer,
+            joint=spec.joint,
+            n_classes=spec.n_classes,
+            seed=spec.seed,
+        )
+
+    def strategy_names(self) -> tuple[tuple[str, str], ...]:
+        """The strategies that actually plan: a joint optimizer REPLACES the
+        partitioner+placer pipeline, so only it is reported when set."""
+        if self.joint is not None:
+            return (("joint", self.joint.name),)
+        return (("partitioner", self.partitioner.name),
+                ("placer", self.placer.name))
+
+    # -- core compilation ----------------------------------------------------
+    def plan(
+        self,
+        graph: LayerGraph,
+        comm: CommGraph,
+        *,
+        capacity: float | None = None,
+        version: int = 0,
+        max_parts: int | None = None,
+        seed: int | None = None,
+        include_dispatcher: bool = True,
+        dispatcher: int | None = None,
+        device_flops: float | None = None,
+        compression_ratio: float = 1.0,
+    ) -> Plan:
+        """Partition + place ``graph`` on ``comm``; score the result.
+
+        ``capacity`` defaults to the cluster's max node capacity.  ``seed``
+        overrides the planner's own (the dispatcher threads its RNG stream
+        through here).  With a joint strategy set, partitioning and placement
+        are solved together and the partitioner/placer names are ignored.
+        """
+        if seed is None:
+            seed = self.seed
+        cap = capacity if capacity is not None else float(max(comm.node_capacity))
+        in_bytes = graph.in_bytes if include_dispatcher else 0.0
+        out_bytes = graph.layers[-1].out_bytes if include_dispatcher else 0.0
+
+        if self.joint is not None:
+            res = self.joint.fn(
+                graph, comm, int(cap),
+                **_filter_kwargs(self.joint.fn, dict(
+                    n_classes=self.n_classes, seed=seed, max_parts=max_parts,
+                    include_dispatcher=include_dispatcher, dispatcher=dispatcher,
+                )),
+            )
+            part, place = res.partition, res.placement
+        else:
+            part = self.partitioner.fn(
+                graph, int(cap),
+                **_filter_kwargs(self.partitioner.fn, dict(max_parts=max_parts)),
+            )
+            if not part.feasible:
+                return Plan(version, part,
+                            PlacementResult(False, (), float("inf"), "n/a"),
+                            strategies=self.strategy_names())
+            place = self.place(
+                part.boundaries, [p.param_bytes for p in part.partitions], comm,
+                seed=seed, in_bytes=in_bytes, out_bytes=out_bytes,
+                dispatcher=dispatcher,
+            )
+
+        if not (part.feasible and place.feasible):
+            return Plan(version, part, place, strategies=self.strategy_names())
+        metrics = evaluate_pipeline(
+            part.partitions, place.path, comm,
+            device_flops=device_flops, in_bytes=in_bytes, dispatcher=dispatcher,
+            compression_ratio=compression_ratio,
+        )
+        return Plan(
+            version, part, place,
+            predicted_bottleneck_s=float(place.bottleneck_latency),
+            predicted_throughput=float(metrics.effective_throughput),
+            strategies=self.strategy_names(),
+        )
+
+    def place(
+        self,
+        boundaries,
+        part_bytes,
+        comm: CommGraph,
+        *,
+        seed: int | None = None,
+        in_bytes: float = 0.0,
+        out_bytes: float = 0.0,
+        dispatcher: int | None = None,
+    ) -> PlacementResult:
+        """Placement only -- the dispatcher's re-placement (recovery) path."""
+        if seed is None:
+            seed = self.seed
+        return self.placer.fn(
+            boundaries, part_bytes, comm,
+            **_filter_kwargs(self.placer.fn, dict(
+                n_classes=self.n_classes, seed=seed,
+                in_bytes=in_bytes, out_bytes=out_bytes, dispatcher=dispatcher,
+            )),
+        )
+
+    # -- spec front door -----------------------------------------------------
+    def compile(self, spec: "DeploymentSpec", *, version: int = 0) -> Plan:
+        """Validate a spec, build its cluster, plan, and enforce SLOs.
+
+        Raises ``InfeasibleSpecError`` (with structured reasons) on a bad
+        spec, an infeasible plan, or a missed SLO.  This is the pure-planning
+        entry point; ``api.deploy`` adds the serving stack on top.
+        """
+        from repro.api.spec import InfeasibleSpecError
+
+        spec.check()
+        graph = spec.graph()
+        comm, _ = spec.cluster.build()
+        # mirror Dispatcher.configure at bootstrap (all nodes healthy, leader
+        # = lowest id = 0, dispatcher round-trip always scored) so the pure
+        # planning answer agrees with what deploy() would deploy -- modulo
+        # probe noise, which only deploy() sees
+        plan = self.plan(
+            graph, comm,
+            capacity=spec.capacity, version=version, max_parts=comm.n,
+            dispatcher=0,
+            include_dispatcher=True,
+            compression_ratio=spec.compression_ratio,
+        )
+        issues = plan.slo_issues(spec)
+        if issues:
+            raise InfeasibleSpecError(issues)
+        return plan

@@ -1,0 +1,144 @@
+"""Strategy registry: named, discoverable partition/placement/joint algorithms.
+
+Every algorithm that the declarative API can invoke self-registers here by
+name via the ``@register_strategy(kind, name)`` decorator applied at its
+definition site (``core/partitioner.py``, ``core/placement.py``,
+``core/joint.py``).  The registry is the single source of truth for
+
+  * which strategies exist (``list_strategies(kind)``),
+  * which one a ``DeploymentSpec`` means by a name (``get_strategy``), and
+  * what runs when no name is given (``default_strategy`` -- the paper's
+    pipeline: ``min_bottleneck`` partitioning + ``color_coding`` placement).
+
+Unknown names raise ``UnknownStrategyError`` carrying did-you-mean
+suggestions, so a typo in a spec fails at validation time with a readable
+message instead of deep inside placement.
+
+This module deliberately imports nothing from ``repro.core`` -- the core
+algorithm modules import *it* to self-register, and ``_ensure_registered``
+imports them lazily on first lookup so ``list_strategies`` works no matter
+which side was imported first.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+from typing import Callable
+
+KINDS = ("partitioner", "placer", "joint")
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """One registered algorithm: callable + metadata for specs/docs/CLI."""
+
+    kind: str
+    name: str
+    fn: Callable
+    description: str = ""
+    default: bool = False
+
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+
+class UnknownStrategyError(KeyError):
+    """Raised for a name not in the registry; carries suggestions."""
+
+    def __init__(self, kind: str, name: str, known: tuple[str, ...]):
+        self.kind = kind
+        self.name = name
+        self.known = known
+        self.suggestions = tuple(
+            difflib.get_close_matches(name, known, n=3, cutoff=0.4)
+        )
+        msg = f"unknown {kind} strategy {name!r}; registered: {', '.join(known)}"
+        if self.suggestions:
+            msg += f" (did you mean {' or '.join(map(repr, self.suggestions))}?)"
+        super().__init__(msg)
+
+    def __str__(self) -> str:  # KeyError.__str__ repr-quotes; keep it readable
+        return self.args[0]
+
+
+_REGISTRY: dict[str, dict[str, Strategy]] = {kind: {} for kind in KINDS}
+_DEFAULTS: dict[str, str] = {}
+
+
+def register_strategy(
+    kind: str, name: str, *, default: bool = False, description: str = ""
+) -> Callable[[Callable], Callable]:
+    """Decorator: register ``fn`` as the ``kind`` strategy called ``name``."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown strategy kind {kind!r}; one of {KINDS}")
+
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY[kind]:
+            raise ValueError(f"duplicate {kind} strategy {name!r}")
+        _REGISTRY[kind][name] = Strategy(kind, name, fn, description, default)
+        if default:
+            prior = _DEFAULTS.get(kind)
+            if prior is not None and prior != name:
+                raise ValueError(f"two defaults for {kind}: {prior!r}, {name!r}")
+            _DEFAULTS[kind] = name
+        return fn
+
+    return deco
+
+
+def _ensure_registered() -> None:
+    """Import the algorithm modules so their decorators have run."""
+    import repro.core.joint  # noqa: F401
+    import repro.core.partitioner  # noqa: F401
+    import repro.core.placement  # noqa: F401
+
+
+def get_strategy(kind: str, name: str) -> Strategy:
+    """Look up a strategy by name; unknown names raise with suggestions."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown strategy kind {kind!r}; one of {KINDS}")
+    _ensure_registered()
+    try:
+        return _REGISTRY[kind][name]
+    except KeyError:
+        raise UnknownStrategyError(kind, name, list_strategies(kind)) from None
+
+
+def list_strategies(kind: str) -> tuple[str, ...]:
+    """Registered names for one kind, sorted (default first)."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown strategy kind {kind!r}; one of {KINDS}")
+    _ensure_registered()
+    names = sorted(_REGISTRY[kind])
+    dflt = _DEFAULTS.get(kind)
+    if dflt in names:
+        names.remove(dflt)
+        names.insert(0, dflt)
+    return tuple(names)
+
+
+def default_strategy(kind: str) -> str:
+    """The name used when a spec leaves the strategy unset."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown strategy kind {kind!r}; one of {KINDS}")
+    _ensure_registered()
+    return _DEFAULTS[kind]
+
+
+def strategy_table() -> list[dict[str, str]]:
+    """All registered strategies as rows (kind/name/default/description)."""
+    _ensure_registered()
+    rows = []
+    for kind in KINDS:
+        for name in list_strategies(kind):
+            s = _REGISTRY[kind][name]
+            rows.append(
+                {
+                    "kind": kind,
+                    "name": name,
+                    "default": "yes" if s.default else "",
+                    "description": s.description,
+                }
+            )
+    return rows

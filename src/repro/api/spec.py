@@ -1,0 +1,262 @@
+"""``DeploymentSpec``: a frozen, validated description of one deployment.
+
+A spec names *what* to deploy (a ``LayerGraph`` or a model-zoo name), *where*
+(a ``ClusterSpec``: explicit ``CommGraph`` or a seeded random wireless
+cluster), *how* (strategy names from the registry, compression, bandwidth
+classes), and *how well* (optional SLOs).  ``validate()`` returns structured
+``SpecIssue``s explaining *why* a spec is unusable -- an unknown strategy
+name, a single layer that exceeds node capacity, a model that cannot fit the
+cluster -- instead of letting the failure surface as a cryptic infeasible
+placement deep in the solver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.api.registry import UnknownStrategyError, get_strategy
+from repro.core.graph import LayerGraph
+from repro.core.placement import CommGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecIssue:
+    """One structured reason a spec cannot be deployed."""
+
+    code: str  # machine-readable: "unknown_strategy", "layer_exceeds_capacity", ...
+    message: str  # human-readable explanation
+
+    def __str__(self) -> str:
+        return f"[{self.code}] {self.message}"
+
+
+class InfeasibleSpecError(ValueError):
+    """Spec validation failed; ``issues`` lists every reason found."""
+
+    def __init__(self, issues: tuple[SpecIssue, ...]):
+        self.issues = tuple(issues)
+        super().__init__(
+            "infeasible deployment spec:\n  " + "\n  ".join(str(i) for i in issues)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Where to deploy: an explicit ``CommGraph``, or a seeded random cluster.
+
+    Exactly one description must be given:
+
+      * ``comm`` -- a prebuilt communication graph (bandwidths + capacities);
+      * ``n_nodes`` + ``capacity_bytes`` -- generate a wireless cluster with
+        ``core.simulate.random_cluster`` (n compute nodes + dispatcher node 0,
+        positions seeded by ``seed`` in an ``arena_m``-sized arena).
+    """
+
+    n_nodes: int | None = None
+    capacity_bytes: float | None = None
+    comm: CommGraph | None = None
+    arena_m: float = 100.0
+    seed: int = 0
+
+    def validate(self) -> tuple[SpecIssue, ...]:
+        issues = []
+        any_random = self.n_nodes is not None or self.capacity_bytes is not None
+        all_random = self.n_nodes is not None and self.capacity_bytes is not None
+        if self.comm is not None and any_random:
+            issues.append(SpecIssue(
+                "ambiguous_cluster",
+                "comm= and n_nodes=/capacity_bytes= both given; the random-"
+                "cluster arguments would be silently ignored",
+            ))
+        elif self.comm is None and not all_random:
+            issues.append(SpecIssue(
+                "ambiguous_cluster",
+                "give exactly one of comm= or (n_nodes= and capacity_bytes=)",
+            ))
+        if self.n_nodes is not None and self.n_nodes < 1:
+            issues.append(SpecIssue("bad_cluster", "n_nodes must be >= 1"))
+        if self.capacity_bytes is not None and self.capacity_bytes <= 0:
+            issues.append(SpecIssue("bad_cluster", "capacity_bytes must be > 0"))
+        return tuple(issues)
+
+    def build(self):
+        """Materialize ``(comm, positions)``; positions is None for explicit comm."""
+        from repro.core.simulate import random_cluster
+
+        if self.comm is not None:
+            return self.comm, None
+        return random_cluster(
+            self.n_nodes, self.capacity_bytes, self.arena_m, self.seed,
+            with_positions=True,
+        )
+
+
+def _resolve_model(model) -> tuple[LayerGraph, Callable | None]:
+    """model field -> (graph, executor_for_version | None).
+
+    Accepts a ``LayerGraph``, a model-zoo name (``vgg16``, ``resnet50``,
+    ``inceptionv3``, ``mobilenetv2``), or ``demo_mlp`` (the executable demo
+    model, which also supplies a versioned executor).
+    """
+    if isinstance(model, LayerGraph):
+        return model, None
+    if not isinstance(model, str):
+        raise TypeError(f"model must be a LayerGraph or name, got {type(model)}")
+    from repro.core.model_zoo import PAPER_MODELS, demo_mlp
+
+    if model in PAPER_MODELS:
+        return PAPER_MODELS[model](), None
+    if model in ("demo_mlp", "mlp"):
+        return demo_mlp()
+    raise KeyError(model)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentSpec:
+    """Everything ``deploy()`` needs, declared up front.
+
+    Fields
+    ------
+    model:
+        ``LayerGraph``, model-zoo name, or ``"demo_mlp"`` (executable demo).
+    cluster:
+        ``ClusterSpec`` (or a raw ``CommGraph``, wrapped automatically).
+    capacity:
+        per-node memory cap handed to the partitioner; ``None`` uses the
+        cluster's max node capacity (the dispatcher's historical default).
+    compression_ratio:
+        boundary compression (paper: ZFP/LZ4; ours: int8 analogue).
+    partitioner / placer:
+        registry names; ``None`` means the registered default.
+    joint:
+        optional joint-optimizer name (``sequential`` / ``joint``); when set
+        the planner runs it *instead of* the partitioner+placer pipeline.
+    n_classes / seed:
+        bandwidth-class count for quantization, and the planning seed.
+    max_bottleneck_s / min_throughput:
+        optional SLOs checked against the plan's predicted metrics.
+    executor_for_version:
+        version -> ExecutorFn for real serving; ``None`` falls back to the
+        model's own executor (``demo_mlp``) or a pass-through executor
+        (timing-only simulation).
+    microbatch:
+        serving-loop admission batch size.
+    """
+
+    model: Any
+    cluster: Any
+    capacity: float | None = None
+    compression_ratio: float = 1.0
+    partitioner: str | None = None
+    placer: str | None = None
+    joint: str | None = None
+    n_classes: int | None = 4
+    seed: int = 0
+    max_bottleneck_s: float | None = None
+    min_throughput: float | None = None
+    executor_for_version: Callable | None = None
+    microbatch: int = 4
+
+    def __post_init__(self) -> None:
+        if isinstance(self.cluster, CommGraph):
+            object.__setattr__(self, "cluster", ClusterSpec(comm=self.cluster))
+
+    # -- resolution ----------------------------------------------------------
+    def resolve_model(self) -> tuple[LayerGraph, Callable | None]:
+        return _resolve_model(self.model)
+
+    def graph(self) -> LayerGraph:
+        return self.resolve_model()[0]
+
+    def strategy_names(self) -> dict[str, str | None]:
+        from repro.api.registry import default_strategy
+
+        return {
+            "partitioner": self.partitioner or default_strategy("partitioner"),
+            "placer": self.placer or default_strategy("placer"),
+            "joint": self.joint,
+        }
+
+    # -- validation ----------------------------------------------------------
+    def validate(self) -> tuple[SpecIssue, ...]:
+        """Every reason this spec cannot deploy; empty tuple when clean.
+
+        Static checks only -- SLOs need a plan and are checked by the
+        planner (``Plan.slo_issues``) after prediction.
+        """
+        issues: list[SpecIssue] = []
+
+        # strategy names exist in the registry
+        for kind, name in (("partitioner", self.partitioner),
+                           ("placer", self.placer),
+                           ("joint", self.joint)):
+            if name is None:
+                continue
+            try:
+                get_strategy(kind, name)
+            except UnknownStrategyError as e:
+                issues.append(SpecIssue("unknown_strategy", str(e)))
+
+        # model resolves
+        try:
+            graph, _ = self.resolve_model()
+        except KeyError as e:
+            from repro.core.model_zoo import PAPER_MODELS
+
+            known = ", ".join([*PAPER_MODELS, "demo_mlp"])
+            issues.append(SpecIssue(
+                "unknown_model", f"model {e.args[0]!r} not in the zoo ({known})"
+            ))
+            graph = None
+        except TypeError as e:
+            issues.append(SpecIssue("bad_model", str(e)))
+            graph = None
+
+        # cluster description is well-formed
+        if not isinstance(self.cluster, ClusterSpec):
+            issues.append(SpecIssue(
+                "bad_cluster", f"cluster must be ClusterSpec/CommGraph, "
+                               f"got {type(self.cluster).__name__}"
+            ))
+            cluster_ok = False
+        else:
+            cluster_issues = self.cluster.validate()
+            issues.extend(cluster_issues)
+            cluster_ok = not cluster_issues
+
+        if self.compression_ratio <= 0:
+            issues.append(SpecIssue("bad_compression",
+                                    "compression_ratio must be > 0"))
+
+        # capacity feasibility: report WHY, naming the offending layer
+        if graph is not None and cluster_ok:
+            comm, _ = self.cluster.build()
+            cap = self.capacity
+            if cap is None:
+                cap = float(max(comm.node_capacity, default=0.0))
+            worst = max(graph.layers, key=lambda l: l.param_bytes)
+            if worst.param_bytes > cap:
+                issues.append(SpecIssue(
+                    "layer_exceeds_capacity",
+                    f"layer {worst.name!r} needs {worst.param_bytes} B but the "
+                    f"per-node capacity is {cap:.0f} B -- no contiguous "
+                    f"partition can host it; raise capacity or split the layer",
+                ))
+            hostable = sum(c for c in comm.node_capacity if c > 0)
+            if graph.total_param_bytes > hostable:
+                issues.append(SpecIssue(
+                    "model_exceeds_cluster",
+                    f"model needs {graph.total_param_bytes} B but the cluster's "
+                    f"hosting nodes hold {hostable:.0f} B total -- add nodes or "
+                    f"raise per-node capacity",
+                ))
+
+        return tuple(issues)
+
+    def check(self) -> "DeploymentSpec":
+        """Raise ``InfeasibleSpecError`` with every issue found; else self."""
+        issues = self.validate()
+        if issues:
+            raise InfeasibleSpecError(issues)
+        return self

@@ -37,7 +37,8 @@ import dataclasses
 from collections import deque
 from typing import Callable, Sequence
 
-from repro.cluster.dispatcher import DeploymentPlan, Dispatcher
+from repro.api.planner import Plan, Planner
+from repro.cluster.dispatcher import UNSET, Dispatcher
 from repro.cluster.events import (
     ClusterEvent,
     LinkDegraded,
@@ -92,6 +93,9 @@ class ControlPlane:
     executor_for_version:
         version -> ExecutorFn running partition [start, stop) on an input.
         Versions may change weights, so the executor is versioned too.
+    planner:
+        strategy resolution (``repro.api.Planner``); ``None`` builds the
+        default (``min_bottleneck`` + ``color_coding``, the paper pipeline).
     """
 
     def __init__(
@@ -101,9 +105,10 @@ class ControlPlane:
         graph_for_version: Callable[[int], LayerGraph],
         executor_for_version: Callable[[int], ExecutorFn],
         *,
+        planner: Planner | None = None,
         capacity: float | None = None,
         compression_ratio: float = 1.0,
-        n_classes: int | None = 4,
+        n_classes: int | None = UNSET,
         link_tolerance: float = 1.25,
         seed: int = 0,
     ):
@@ -111,7 +116,9 @@ class ControlPlane:
         self.store = store
         self.graph_for_version = graph_for_version
         self.executor_for_version = executor_for_version
-        self.dispatcher = Dispatcher(cluster, store, n_classes=n_classes, seed=seed)
+        self.dispatcher = Dispatcher(
+            cluster, store, planner=planner, n_classes=n_classes, seed=seed
+        )
         self.link_tolerance = link_tolerance
         self._default_capacity = capacity
         self._default_compression = compression_ratio
@@ -150,12 +157,56 @@ class ControlPlane:
         self.store.publish(version)
         return self.pipeline
 
-    def _configure(self, graph: LayerGraph, version: int) -> DeploymentPlan:
+    def _configure(self, graph: LayerGraph, version: int) -> Plan:
         plan = self.dispatcher.configure(
-            graph, version, capacity=self.desired.capacity
+            graph, version, capacity=self.desired.capacity,
+            compression_ratio=self.desired.compression_ratio,
         )
         if not plan.feasible:
             raise RuntimeError(f"version {version} does not fit the cluster")
+        return plan
+
+    @property
+    def last_plan(self) -> Plan | None:
+        """The plan matching what is deployed: the dispatcher keeps it
+        current across configure AND the re-placement recovery path."""
+        return self.dispatcher.last_plan
+
+    # -- strategy swap -------------------------------------------------------
+    @property
+    def planner(self) -> Planner:
+        return self.dispatcher.planner
+
+    def replan(self, planner: Planner | None = None) -> Plan:
+        """Re-plan the desired state (optionally under a new ``Planner``) and
+        redeploy in place -- probed bandwidths, leader, and generation are
+        reused, exactly like a version bump without the version.
+
+        This is how a live deployment swaps strategies
+        (``Deployment.replan(partitioner=..., placer=...)`` builds the
+        planner and calls here).  Raises if the new plan is infeasible,
+        leaving the running pipeline untouched.
+        """
+        if self.desired is None or self.pipeline is None:
+            raise RuntimeError("bootstrap() before replan()")
+        old_planner = self.dispatcher.planner
+        if planner is not None:
+            self.dispatcher.planner = planner
+        try:
+            plan = self._configure(self.desired.graph, self.desired.version)
+        except RuntimeError:
+            self.dispatcher.planner = old_planner  # keep a working strategy
+            raise
+        for pod in self.pipeline.pods:  # stop the old inference pods
+            pod.alive = False
+        self.pipeline = self.dispatcher.deploy(
+            plan, self.executor_for_version(self.desired.version),
+            compression_ratio=self.desired.compression_ratio,
+        )
+        self.history.append(ReconcileAction(
+            None, "redeploy",
+            f"replan with {dict(plan.strategies)}",
+        ))
         return plan
 
     # -- event intake --------------------------------------------------------

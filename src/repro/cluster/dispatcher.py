@@ -5,36 +5,38 @@ The SEIFER system-initialization and configuration steps (Sec. 2.1-2.2):
   1. leader election -- lowest-id healthy node wins (bully-style),
   2. IPerf jobs -- pairwise bandwidth probes, leader-directed; measurements
      are the true link bandwidth with multiplicative log-normal noise,
-  3. partitioning + placement containers -- run the core algorithms on the
-     PROBED bandwidths, store partition artifacts + the plan,
+  3. partitioning + placement containers -- compiled by the ``Planner``
+     (strategy names resolved through ``repro.api.registry``) on the PROBED
+     bandwidths; partition artifacts + the plan go to the store,
   4. deploy -- one pod per partition, wired in a chain,
-  5. node-failure recovery -- re-place on the degraded graph and restart
-     crashed pods from the store.
+  5. node-failure recovery -- re-place on the degraded graph (the planner's
+     ``place``) and restart crashed pods from the store.
+
+The dispatcher is pure *mechanism*: which algorithms run is the planner's
+business, so swapping ``min_bottleneck``/``color_coding`` for any registered
+strategy pair is a constructor argument, not a code edit.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Sequence
+from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.api.planner import Plan, Planner
 from repro.cluster.lifecycle import EdgeCluster, InferencePipeline, Pod
 from repro.cluster.store import ArtifactStore
 from repro.core.graph import LayerGraph
-from repro.core.partitioner import PartitionResult, partition_min_bottleneck
-from repro.core.placement import CommGraph, PlacementResult, place_color_coding
+from repro.core.placement import CommGraph
 
+# ``DeploymentPlan`` was the dispatcher's own plan type before the
+# declarative API subsumed it; the alias keeps old imports working.
+DeploymentPlan = Plan
 
-@dataclasses.dataclass
-class DeploymentPlan:
-    version: int
-    partition: PartitionResult
-    placement: PlacementResult
-
-    @property
-    def feasible(self) -> bool:
-        return self.partition.feasible and self.placement.feasible
+# sentinel: n_classes=None legitimately means "unquantized", so "not given"
+# needs its own marker to detect a planner/n_classes conflict
+UNSET = object()
 
 
 class Dispatcher:
@@ -43,17 +45,29 @@ class Dispatcher:
         cluster: EdgeCluster,
         store: ArtifactStore,
         *,
-        n_classes: int | None = 4,
+        planner: Planner | None = None,
+        n_classes: int | None = UNSET,
         probe_noise: float = 0.05,
         seed: int = 0,
     ):
         self.cluster = cluster
         self.store = store
-        self.n_classes = n_classes
+        if planner is not None:
+            if n_classes is not UNSET:
+                raise ValueError(
+                    "pass n_classes via the Planner when supplying one "
+                    "(planner.n_classes would silently win otherwise)"
+                )
+            self.planner = planner
+        else:
+            self.planner = Planner(
+                n_classes=4 if n_classes is UNSET else n_classes
+            )
         self.probe_noise = probe_noise
         self.rng = np.random.default_rng(seed)
         self.leader: int | None = None
         self.probed: CommGraph | None = None
+        self.last_plan: Plan | None = None  # most recent feasible plan
 
     # -- Sec 2.1: system initialization --------------------------------------
     def reset(self) -> None:
@@ -87,41 +101,30 @@ class Dispatcher:
         *,
         capacity: float | None = None,
         include_dispatcher: bool = True,
-    ) -> DeploymentPlan:
+        compression_ratio: float = 1.0,
+    ) -> Plan:
         if self.leader is None:
             self.elect_leader()
         comm = self.probed if self.probed is not None else self.probe_bandwidths()
         cap = capacity if capacity is not None else float(np.max(comm.node_capacity))
-        part = partition_min_bottleneck(graph, int(cap), max_parts=len(self.cluster.healthy_ids()))
-        if not part.feasible:
-            return DeploymentPlan(version, part, PlacementResult(False, (), float("inf"), "n/a"))
-        place = place_color_coding(
-            part.boundaries,
-            [p.param_bytes for p in part.partitions],
-            comm,
-            n_classes=self.n_classes,
+        plan = self.planner.plan(
+            graph, comm,
+            capacity=cap,
+            version=version,
+            max_parts=len(self.cluster.healthy_ids()),
             seed=int(self.rng.integers(1 << 31)),
-            in_bytes=graph.in_bytes if include_dispatcher else 0.0,
-            out_bytes=graph.layers[-1].out_bytes if include_dispatcher else 0.0,
+            include_dispatcher=include_dispatcher,
             dispatcher=self.leader if include_dispatcher else None,
+            compression_ratio=compression_ratio,
         )
-        plan = DeploymentPlan(version, part, place)
         if plan.feasible:
-            self.store.put_json(
-                version,
-                "plan",
-                {
-                    "cuts": list(part.cuts),
-                    "path": list(place.path),
-                    "bottleneck_latency": place.bottleneck_latency,
-                    "algorithm": place.algorithm,
-                },
-            )
+            self.last_plan = plan
+            self.store.put_json(version, "plan", plan.summary())
         return plan
 
     def deploy(
         self,
-        plan: DeploymentPlan,
+        plan: Plan,
         executor: Callable,
         *,
         compression_ratio: float = 1.0,
@@ -167,20 +170,19 @@ class Dispatcher:
         """Re-place on the degraded cluster; restart dead pods from the store.
 
         The paper reschedules pods onto healthy nodes; partitions are reused
-        (their files live on NFS), only the placement is re-solved.  Falls
-        back to a full reconfigure when the surviving nodes cannot host the
-        existing partitions.
+        (their files live on NFS), only the placement is re-solved through
+        the planner's placer strategy.  Falls back to a full reconfigure when
+        the surviving nodes cannot host the existing partitions.
         """
         if self.leader is not None and not self.cluster.nodes[self.leader].healthy:
             self.elect_leader()  # leader itself died -> re-elect
         self.probe_bandwidths()
         comm = self.probed
         part = pipeline_partition(pipeline)
-        place = place_color_coding(
+        place = self.planner.place(
             pipeline.boundary_bytes,
             [p.param_bytes for p in part],
             comm,
-            n_classes=self.n_classes,
             seed=int(self.rng.integers(1 << 31)),
             # score the dispatcher round-trip like configure() does, so a
             # recovery placement doesn't strand the first/last partition
@@ -191,7 +193,8 @@ class Dispatcher:
         )
         if not place.feasible:
             # partitions no longer fit the surviving nodes: full reconfigure
-            plan = self.configure(graph, version, capacity=capacity)
+            plan = self.configure(graph, version, capacity=capacity,
+                                  compression_ratio=pipeline.compression_ratio)
             if not plan.feasible:
                 raise RuntimeError("cluster too degraded to host the model")
             return self.deploy(plan, pipeline.executor,
@@ -201,6 +204,22 @@ class Dispatcher:
                 pod.restart_on(node)
             else:
                 pod.node_id = node
+        # the plan record must track what is actually deployed: same
+        # partitions, new placement, metrics re-scored on the re-probed comm
+        if self.last_plan is not None:
+            from repro.core.bottleneck import evaluate_pipeline
+
+            metrics = evaluate_pipeline(
+                part, place.path, comm,
+                in_bytes=graph.in_bytes, dispatcher=self.leader,
+                compression_ratio=pipeline.compression_ratio,
+            )
+            self.last_plan = dataclasses.replace(
+                self.last_plan,
+                placement=place,
+                predicted_bottleneck_s=float(place.bottleneck_latency),
+                predicted_throughput=float(metrics.effective_throughput),
+            )
         return pipeline
 
 

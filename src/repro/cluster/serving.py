@@ -105,6 +105,18 @@ class ServingLoop:
             self.completed.append(req)
         return batch
 
+    def metrics(self) -> dict:
+        """Serving-side counters for ``Deployment.metrics()`` / benchmarks."""
+        done = len(self.completed)
+        return {
+            "completed": done,
+            "failed": len(self.failed),
+            "backlog": len(self.queue),
+            "clock_s": self.clock_s,
+            "throughput": done / self.clock_s if self.clock_s > 0 else 0.0,
+            "retries": sum(r.attempts for r in self.completed),
+        }
+
     def drain(self, max_rounds: int = 10_000) -> list[Request]:
         """Step until the queue empties (or max_rounds); returns completions."""
         done: list[Request] = []

@@ -14,6 +14,7 @@ from repro.core.partitioner import (
     PartitionResult,
     partition_exact_k,
     partition_exhaustive,
+    partition_fewest_parts,
     partition_min_bottleneck,
     partition_min_sum,
     partition_paper_greedy,
@@ -39,6 +40,7 @@ __all__ = [
     "PartitionResult",
     "partition_exact_k",
     "partition_exhaustive",
+    "partition_fewest_parts",
     "partition_min_bottleneck",
     "partition_min_sum",
     "partition_paper_greedy",

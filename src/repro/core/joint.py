@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+from repro.api.registry import register_strategy
 from repro.core.graph import LayerGraph
 from repro.core.partitioner import (
     PartitionResult,
@@ -39,6 +40,10 @@ class JointResult:
         return self.placement.bottleneck_latency if self.feasible else float("inf")
 
 
+@register_strategy(
+    "joint", "sequential", default=True,
+    description="paper's pipeline: min-bottleneck partition, then placement",
+)
 def sequential(
     graph: LayerGraph,
     comm: CommGraph,
@@ -47,9 +52,16 @@ def sequential(
     seed: int = 0,
     include_dispatcher: bool = False,
     dispatcher: int | None = None,
+    max_parts: int | None = None,
 ) -> JointResult:
-    """The paper's pipeline: min-bottleneck partition, then placement."""
-    part = partition_min_bottleneck(graph, capacity, max_parts=comm.n)
+    """The paper's pipeline: min-bottleneck partition, then placement.
+
+    ``max_parts`` caps the part count (callers exclude non-hosting nodes,
+    e.g. the dispatcher); ``None`` allows up to one part per node.
+    """
+    if max_parts is None:
+        max_parts = comm.n
+    part = partition_min_bottleneck(graph, capacity, max_parts=max_parts)
     if not part.feasible:
         return JointResult(part, PlacementResult(False, (), float("inf"), "n/a"))
     place = place_color_coding(
@@ -65,6 +77,10 @@ def sequential(
     return JointResult(part, place)
 
 
+@register_strategy(
+    "joint", "joint",
+    description="joint search over the partition-count frontier (future work #3)",
+)
 def joint(
     graph: LayerGraph,
     comm: CommGraph,
@@ -74,22 +90,26 @@ def joint(
     include_dispatcher: bool = False,
     dispatcher: int | None = None,
     max_candidates: int | None = None,
+    max_parts: int | None = None,
 ) -> JointResult:
     """Joint search over the partition-count frontier.
 
-    For each feasible part count k in [k_min, n_nodes], compute the exact-k
+    For each feasible part count k in [k_min, max_parts], compute the exact-k
     min-max-cut partition, place it, and keep the lowest true bottleneck.
     """
-    base = partition_min_bottleneck(graph, capacity, max_parts=comm.n)
+    if max_parts is None:
+        max_parts = comm.n
+    base = partition_min_bottleneck(graph, capacity, max_parts=max_parts)
     if not base.feasible:
         return JointResult(base, PlacementResult(False, (), float("inf"), "n/a"))
     k_min = base.n_parts
-    ks: Sequence[int] = range(k_min, comm.n + 1)
+    ks: Sequence[int] = range(k_min, max_parts + 1)
     if max_candidates is not None:
         ks = list(ks)[:max_candidates]
     # the sequential solution is always on the frontier: joint can only improve
     seq = sequential(graph, comm, capacity, n_classes=n_classes, seed=seed,
-                     include_dispatcher=include_dispatcher, dispatcher=dispatcher)
+                     include_dispatcher=include_dispatcher, dispatcher=dispatcher,
+                     max_parts=max_parts)
     best: JointResult | None = seq if seq.feasible else None
     for k in ks:
         part = partition_exact_k(graph, capacity, k)

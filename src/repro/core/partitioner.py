@@ -22,6 +22,12 @@ All functions return a ``PartitionResult``; infeasible inputs (a single
 layer exceeding capacity, or more parts required than allowed) yield
 ``feasible=False`` rather than raising, so the placement layer / simulator
 can score infeasible configs.
+
+Every algorithm self-registers in the strategy registry
+(``repro.api.registry``) under the names the declarative API uses:
+``min_bottleneck`` (default), ``paper_greedy``, ``min_sum``, ``exact_k``
+(minimal-part-count variant), ``exhaustive``.  The shared registered
+signature is ``fn(graph, capacity, max_parts=None) -> PartitionResult``.
 """
 
 from __future__ import annotations
@@ -30,6 +36,7 @@ import dataclasses
 import itertools
 from typing import Sequence
 
+from repro.api.registry import register_strategy
 from repro.core.graph import LayerGraph, Partition, boundary_bytes, make_partitions
 
 
@@ -84,13 +91,20 @@ def _fits(graph: LayerGraph, capacity: int) -> bool:
 # Paper greedy
 # ---------------------------------------------------------------------------
 
-def partition_paper_greedy(graph: LayerGraph, capacity: int) -> PartitionResult:
+@register_strategy(
+    "partitioner", "paper_greedy",
+    description="paper's capacity-filling greedy, cheapest-recent-edge backtracking",
+)
+def partition_paper_greedy(
+    graph: LayerGraph, capacity: int, max_parts: int | None = None
+) -> PartitionResult:
     """Capacity-filling greedy with cheapest-recent-edge backtracking.
 
     Walk the chain accumulating layers.  When the running segment would
     exceed ``capacity``, cut at the minimum-weight edge *inside* the current
     segment (not necessarily the last edge), then restart accumulation after
     the cut.  This realizes "least data transferred subject to fitting".
+    A ``max_parts`` budget the greedy overruns yields ``feasible=False``.
     """
     algo = "paper_greedy"
     if not _fits(graph, capacity):
@@ -120,6 +134,8 @@ def partition_paper_greedy(graph: LayerGraph, capacity: int) -> PartitionResult:
             cuts[-1] = i - 1
             seg_start = i
             acc = 0
+    if max_parts is not None and len(cuts) + 1 > max_parts:
+        return _infeasible(algo)
     return _result(graph, cuts, algo)
 
 
@@ -158,6 +174,10 @@ def _feasible_with_threshold(
     return cuts
 
 
+@register_strategy(
+    "partitioner", "min_bottleneck", default=True,
+    description="exact min of max cut-edge bytes (binary search + late-cut greedy)",
+)
 def partition_min_bottleneck(
     graph: LayerGraph, capacity: int, max_parts: int | None = None
 ) -> PartitionResult:
@@ -192,6 +212,10 @@ def partition_min_bottleneck(
 # Min total transfer (DP)
 # ---------------------------------------------------------------------------
 
+@register_strategy(
+    "partitioner", "min_sum",
+    description="DP minimizing total transferred bytes over all cuts",
+)
 def partition_min_sum(
     graph: LayerGraph, capacity: int, max_parts: int | None = None
 ) -> PartitionResult:
@@ -272,10 +296,38 @@ def partition_exact_k(graph: LayerGraph, capacity: int, k: int) -> PartitionResu
     return _result(graph, cuts, algo)
 
 
+@register_strategy(
+    "partitioner", "exact_k",
+    description="min-max cut at the minimal feasible part count (fewest pods)",
+)
+def partition_fewest_parts(
+    graph: LayerGraph, capacity: int, max_parts: int | None = None
+) -> PartitionResult:
+    """Min-max cut with the *fewest* parts that fit capacity.
+
+    ``min_bottleneck`` happily spends extra parts to shave the max cut; this
+    strategy first finds the minimal feasible part count (late-cut greedy
+    with every edge allowed), then runs the exact-k DP at that count -- the
+    cheapest deployment in pods, optimal among same-size partitions.
+    """
+    algo = "exact_k"
+    if not _fits(graph, capacity):
+        return _infeasible(algo)
+    max_edge = max(graph.edges, default=0)
+    cuts = _feasible_with_threshold(graph, capacity, max_edge, max_parts)
+    if cuts is None:
+        return _infeasible(algo)
+    return partition_exact_k(graph, capacity, len(cuts) + 1)
+
+
 # ---------------------------------------------------------------------------
 # Exhaustive oracle (tests only)
 # ---------------------------------------------------------------------------
 
+@register_strategy(
+    "partitioner", "exhaustive",
+    description="brute-force oracle over all cut subsets (<= 18 layers)",
+)
 def partition_exhaustive(
     graph: LayerGraph, capacity: int, max_parts: int | None = None
 ) -> PartitionResult:

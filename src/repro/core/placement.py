@@ -22,6 +22,8 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.api.registry import register_strategy
+
 EXACT_NODE_LIMIT = 16  # subset DP up to 2^16 states (vectorized per level)
 
 
@@ -295,6 +297,11 @@ def _color_coding_feasible(
 # Public placement algorithms
 # ---------------------------------------------------------------------------
 
+@register_strategy(
+    "placer", "color_coding", default=True,
+    description="paper's placer: bandwidth-class quantization + min-bottleneck "
+                "k-path (exact subset DP small n, color coding large n)",
+)
 def place_color_coding(
     boundaries: Sequence[float],
     part_bytes: Sequence[float],
@@ -360,6 +367,10 @@ def place_color_coding(
     return PlacementResult(True, tuple(best_path), float(lat), algo, trials_used)
 
 
+@register_strategy(
+    "placer", "greedy",
+    description="left-to-right greedy: always take the fastest feasible link",
+)
 def place_greedy(
     boundaries: Sequence[float],
     part_bytes: Sequence[float],
@@ -409,6 +420,10 @@ def place_greedy(
     return PlacementResult(True, tuple(best[1]), float(best[0]), algo)
 
 
+@register_strategy(
+    "placer", "random",
+    description="random feasible path -- the no-algorithm baseline",
+)
 def place_random(
     boundaries: Sequence[float],
     part_bytes: Sequence[float],
@@ -437,6 +452,10 @@ def place_random(
     return _infeasible(algo)
 
 
+@register_strategy(
+    "placer", "optimal",
+    description="exact optimum on TRUE bandwidths (subset DP, n <= 16)",
+)
 def place_optimal(
     boundaries: Sequence[float],
     part_bytes: Sequence[float],

@@ -4,9 +4,12 @@
 
 Edge mode serves a request stream through the simulated edge cluster's
 control plane instead of the local accelerator, reporting the reconcile
-actions taken under a scripted node failure:
+actions taken under a scripted node failure.  The partition/placement
+strategies are registry names (see ``repro.api.list_strategies``), so every
+registered pair is one CLI flag away:
 
-  PYTHONPATH=src python -m repro.launch.serve --edge --requests 32
+  PYTHONPATH=src python -m repro.launch.serve --edge --requests 32 \\
+      --partitioner min_sum --placer greedy --capacity-frac 0.33 --width 32
 """
 
 from __future__ import annotations
@@ -17,52 +20,60 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import ClusterSpec, DeploymentSpec, deploy, list_strategies
+from repro.cluster import NodeFailed
 from repro.configs import ARCHS, get_config, reduced
+from repro.core.model_zoo import demo_mlp
 from repro.models import lm
 from repro.runtime.serve import make_serve_step
 
 
-def serve_edge(requests: int, nodes: int, seed: int) -> int:
-    """Edge-cluster serving demo: bootstrap -> stream -> kill -> recover."""
-    import tempfile
+def serve_edge(
+    requests: int,
+    nodes: int,
+    seed: int,
+    *,
+    partitioner: str | None = None,
+    placer: str | None = None,
+    joint: str | None = None,
+    capacity_frac: float = 1 / 3,
+    width: int = 32,
+) -> int:
+    """Edge-cluster serving demo: deploy(spec) -> stream -> kill -> recover."""
+    graph, executor_for_version = demo_mlp(d=width)
+    capacity = graph.total_param_bytes * capacity_frac
 
-    from repro.cluster import (
-        ArtifactStore, ControlPlane, EdgeCluster, NodeFailed, ServingLoop,
+    spec = DeploymentSpec(
+        model=graph,
+        executor_for_version=executor_for_version,
+        cluster=ClusterSpec(n_nodes=nodes, capacity_bytes=capacity, seed=seed + 3),
+        partitioner=partitioner,
+        placer=placer,
+        joint=joint,
+        seed=seed,
+        microbatch=4,
     )
-    from repro.core.model_zoo import demo_mlp
-    from repro.core.simulate import random_cluster
-
-    d = 32
-    graph, executor_for_version = demo_mlp(d=d)
-    capacity = graph.total_param_bytes / 3
-
-    cluster = EdgeCluster(random_cluster(nodes, capacity, seed=seed + 3),
-                          flops_per_s=1e9)
-    control = ControlPlane(
-        cluster, ArtifactStore(tempfile.mkdtemp(prefix="seifer-serve-")),
-        lambda v: graph, executor_for_version, capacity=capacity, seed=seed,
-    )
-    control.bootstrap(0)
-    obs = control.observed()
-    print(f"edge serving: {len(obs.path)} partitions on nodes {list(obs.path)}, "
-          f"bottleneck {obs.bottleneck_latency*1e3:.3f} ms")
-    loop = ServingLoop(control, microbatch=4)
+    d = deploy(spec)
+    obs = d.observed()
+    names = dict(d.plan.strategies)
+    print(f"edge serving [{names}]: {len(obs.path)} partitions on nodes "
+          f"{list(obs.path)}, bottleneck {obs.bottleneck_latency*1e3:.3f} ms")
     for _ in range(requests):
-        loop.submit(jnp.ones((d,)) * 0.1)
+        d.submit(jnp.ones((width,)) * 0.1)
     half = requests // 2
     killed = half == 0  # nothing to kill mid-stream on a tiny run
-    while loop.backlog or control.pending:
-        if not killed and len(loop.completed) >= half:
-            victim = control.pipeline.pods[1].node_id
+    while d.loop.backlog or d.control.pending:
+        if not killed and len(d.loop.completed) >= half:
+            pods = d.control.pipeline.pods
+            victim = pods[1 if len(pods) > 1 else 0].node_id
             print(f"killing node {victim} mid-stream...")
-            control.submit(NodeFailed(victim))
+            d.inject(NodeFailed(victim))
             killed = True
-        loop.step()
-    obs = control.observed()
-    print(f"served {len(loop.completed)}/{requests} requests "
-          f"(lost {len(loop.failed)}) in {loop.clock_s:.3f} simulated s; "
-          f"final path {list(obs.path)}, "
-          f"actions: {[a.kind for a in control.history]}")
+        d.step()
+    m = d.metrics()
+    print(f"served {m['serving']['completed']}/{requests} requests "
+          f"(lost {m['serving']['failed']}) in {m['serving']['clock_s']:.3f} "
+          f"simulated s; final path {m['path']}, actions: {m['reconcile_actions']}")
     return 0
 
 
@@ -77,11 +88,28 @@ def main() -> int:
                     help="serve through the simulated edge control plane")
     ap.add_argument("--requests", type=int, default=32, help="edge mode stream size")
     ap.add_argument("--nodes", type=int, default=8, help="edge mode cluster size")
+    ap.add_argument("--partitioner", default=None,
+                    choices=list_strategies("partitioner"),
+                    help="edge mode partition strategy (default: registry default)")
+    ap.add_argument("--placer", default=None,
+                    choices=list_strategies("placer"),
+                    help="edge mode placement strategy (default: registry default)")
+    ap.add_argument("--joint", default=None,
+                    choices=list_strategies("joint"),
+                    help="edge mode joint optimizer (replaces partitioner+placer)")
+    ap.add_argument("--capacity-frac", type=float, default=1 / 3,
+                    help="edge mode per-node capacity as a fraction of model bytes")
+    ap.add_argument("--width", type=int, default=32,
+                    help="edge mode demo-MLP width (d)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.edge:
-        return serve_edge(args.requests, args.nodes, args.seed)
+        return serve_edge(
+            args.requests, args.nodes, args.seed,
+            partitioner=args.partitioner, placer=args.placer, joint=args.joint,
+            capacity_frac=args.capacity_frac, width=args.width,
+        )
     if not args.arch:
         ap.error("--arch is required unless --edge is given")
 
