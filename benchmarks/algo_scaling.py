@@ -13,6 +13,8 @@ from repro.core.simulate import random_cluster
 
 from benchmarks.common import save, table, timer
 
+ARTIFACT = "algo_scaling"  # results/BENCH_algo_scaling.json
+
 
 def run(seed: int = 0) -> dict:
     rng = np.random.default_rng(seed)
@@ -26,7 +28,8 @@ def run(seed: int = 0) -> dict:
         with timer() as t:
             res = partition_min_bottleneck(g, cap)
         rows.append({"stage": "partition", "size": n_layers,
-                     "time_ms": t.s * 1e3, "parts": res.n_parts})
+                     "time_ms": t.s * 1e3, "parts": res.n_parts,
+                     "feasible": res.feasible})
     # placement: node sweep (color coding, beyond the exact-DP limit)
     g = chain("synth64", [(int(rng.integers(1e5, 1e7)), int(rng.integers(1e4, 1e6)))
                           for _ in range(64)])
@@ -42,7 +45,7 @@ def run(seed: int = 0) -> dict:
                      "time_ms": t.s * 1e3, "parts": len(part.partitions),
                      "feasible": res.feasible})
     payload = {"rows": rows}
-    save("algo_scaling", payload)
+    save(ARTIFACT, payload)
     print(table(rows, ["stage", "size", "time_ms", "parts"],
                 "Algorithm wall-time scaling"))
     return payload

@@ -15,6 +15,8 @@ from repro.core.simulate import random_cluster
 
 from benchmarks.common import save, table
 
+ARTIFACT = "approx_ratio"  # results/BENCH_approx_ratio.json
+
 
 def run(trials: int = 24, n_nodes: int = 8, capacity_frac: float = 0.3, seed: int = 0) -> dict:
     rows = []
@@ -46,7 +48,7 @@ def run(trials: int = 24, n_nodes: int = 8, capacity_frac: float = 0.3, seed: in
                     "n": len(ratios),
                 })
     payload = {"rows": rows, "n_nodes": n_nodes, "capacity_frac": capacity_frac}
-    save("approx_ratio", payload)
+    save(ARTIFACT, payload)
     print(table(rows, ["model", "classes", "mean_ratio", "p95_ratio", "max_ratio", "n"],
                 "Color-coding placement vs optimal (approximation ratio)"))
     return payload

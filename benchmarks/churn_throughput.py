@@ -15,11 +15,14 @@ Reported per phase: completed requests, simulated window seconds, and
 throughput (req/s).  Recovery is demonstrated by phase-3 and phase-5
 throughput returning to within a small factor of phase 1.  All convergence
 goes through ``Deployment.inject`` + the serving loop's reconcile -- no
-manual ``Dispatcher.recover()``-style calls.  The partition/placement
+manual ``Dispatcher.recover()``-style calls.  Serving runs through the
+pipelined discrete-event engine by default (``--serving sync`` falls back
+to the synchronous baseline), so recovery cost includes requeueing exactly
+the microbatches resident on the affected stages.  The partition/placement
 strategies are registry names, so the same scenario measures any pair:
 
   PYTHONPATH=src python -m benchmarks.churn_throughput [--smoke]
-      [--partitioner NAME] [--placer NAME]
+      [--partitioner NAME] [--placer NAME] [--serving pipelined|sync]
 """
 
 from __future__ import annotations
@@ -33,6 +36,8 @@ from repro.cluster import NodeFailed
 from repro.core.model_zoo import demo_mlp
 
 from benchmarks.common import save, table
+
+ARTIFACT = "churn_throughput"  # results/BENCH_churn_throughput.json
 
 D = 32
 
@@ -55,7 +60,7 @@ def _serve_phase(dep, name, n_requests, inject=None):
         "phase": name,
         "requests": done,
         "window_s": window_s,
-        "throughput": done / window_s if window_s > 0 else float("inf"),
+        "throughput": done / window_s if window_s > 0 else 0.0,
     }
 
 
@@ -66,6 +71,7 @@ def run(
     seed: int = 0,
     partitioner: str | None = None,
     placer: str | None = None,
+    serving: str = "pipelined",
 ) -> dict:
     graph, executor_for_version = demo_mlp(d=D)
     spec = DeploymentSpec(
@@ -79,6 +85,7 @@ def run(
         placer=placer,
         seed=seed,
         microbatch=microbatch,
+        serving=serving,
     )
     dep = deploy(spec)
     strategies = dict(dep.plan.strategies)
@@ -110,6 +117,9 @@ def run(
     payload = {
         "rows": rows,
         "strategies": strategies,
+        "serving_mode": m["serving"].get("mode", "sync"),
+        "stages": m["serving"].get("stages", []),
+        "requeued_microbatches": m["serving"].get("requeued_microbatches", 0),
         "actions": actions,
         "bottleneck_latencies": {
             "predicted_s": m["predicted_bottleneck_s"],
@@ -125,7 +135,7 @@ def run(
         "per_phase": per_phase,
         "microbatch": microbatch,
     }
-    save("churn_throughput", payload)
+    save(ARTIFACT, payload)
     print(table(rows, ["phase", "requests", "window_s", "throughput", "vs_baseline"],
                 f"Serving throughput under churn ({strategies})"))
     print(f"reconcile actions: {[k for k, _ in actions]}")
@@ -144,11 +154,12 @@ def main() -> int:
     ap.add_argument("--microbatch", type=int, default=4)
     ap.add_argument("--partitioner", default=None)
     ap.add_argument("--placer", default=None)
+    ap.add_argument("--serving", default="pipelined", choices=("pipelined", "sync"))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     per_phase = args.per_phase if args.per_phase is not None else (8 if args.smoke else 40)
     run(per_phase=per_phase, microbatch=args.microbatch, seed=args.seed,
-        partitioner=args.partitioner, placer=args.placer)
+        partitioner=args.partitioner, placer=args.placer, serving=args.serving)
     return 0
 
 

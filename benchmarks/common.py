@@ -1,20 +1,110 @@
-"""Shared benchmark plumbing: result IO + table printing."""
+"""Shared benchmark plumbing: result IO, schema validation, table printing.
+
+Every benchmark payload is persisted as ``results/BENCH_<name>.json`` -- one
+canonical casing (the legacy lowercase ``bench_*.json`` twins are gone), and
+every payload is schema-validated before it is written, so a benchmark that
+emits NaN/Infinity or ragged rows fails loudly instead of producing an
+artifact that silently breaks cross-PR diffing.
+"""
 
 from __future__ import annotations
 
 import json
+import math
 import os
 import time
 from pathlib import Path
 
 RESULTS_DIR = Path(os.environ.get("BENCH_RESULTS", "results"))
 
+ARTIFACT_PREFIX = "BENCH_"  # the single canonical artifact casing
 
-def save(name: str, payload, prefix: str = "bench_") -> Path:
+_SCALARS = (str, int, float, bool, type(None))
+
+
+class PayloadSchemaError(ValueError):
+    """A benchmark payload violates the artifact schema."""
+
+
+def validate_payload(name: str, payload) -> None:
+    """Check a payload against the BENCH_ artifact schema; raise on violation.
+
+    Schema (shared by every benchmark):
+
+      * the payload is a JSON object with string keys;
+      * every leaf is a JSON scalar -- finite numbers only (NaN/Infinity are
+        not JSON and break downstream tooling);
+      * ``rows``, when present, is a non-empty list of flat objects that all
+        share the same key set (a proper table).
+    """
+    if not isinstance(payload, dict):
+        raise PayloadSchemaError(f"{name}: payload must be a dict, got {type(payload).__name__}")
+
+    def walk(value, where):
+        if isinstance(value, dict):
+            for k, v in value.items():
+                if not isinstance(k, str):
+                    raise PayloadSchemaError(f"{name}: non-string key {k!r} at {where}")
+                walk(v, f"{where}.{k}")
+        elif isinstance(value, (list, tuple)):
+            for i, v in enumerate(value):
+                walk(v, f"{where}[{i}]")
+        elif isinstance(value, float):
+            if not math.isfinite(value):
+                raise PayloadSchemaError(f"{name}: non-finite number at {where}")
+        elif not isinstance(value, _SCALARS):
+            raise PayloadSchemaError(
+                f"{name}: non-JSON leaf {type(value).__name__} at {where}"
+            )
+
+    walk(payload, "$")
+    rows = payload.get("rows")
+    if rows is not None:
+        if not isinstance(rows, (list, tuple)) or not rows:
+            raise PayloadSchemaError(f"{name}: 'rows' must be a non-empty list")
+        keys = None
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict):
+                raise PayloadSchemaError(f"{name}: rows[{i}] is not an object")
+            if keys is None:
+                keys = set(row)
+            elif set(row) != keys:
+                raise PayloadSchemaError(
+                    f"{name}: rows[{i}] keys {sorted(set(row))} != rows[0] "
+                    f"keys {sorted(keys)} (ragged table)"
+                )
+            for k, v in row.items():
+                if not isinstance(v, _SCALARS):
+                    raise PayloadSchemaError(
+                        f"{name}: rows[{i}].{k} is not a scalar"
+                    )
+
+
+def _pythonize(value):
+    """numpy scalars/arrays -> plain Python, so artifacts are pure JSON."""
+    if isinstance(value, dict):
+        return {k: _pythonize(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_pythonize(v) for v in value]
+    if hasattr(value, "item") and not isinstance(value, _SCALARS):
+        try:
+            return value.item()  # 0-d numpy scalar
+        except (ValueError, TypeError):
+            return [_pythonize(v) for v in value.tolist()]
+    return value
+
+
+def save(name: str, payload) -> Path:
+    """Validate + persist a payload as ``results/BENCH_<name>.json``.
+
+    The prefix is deliberately not a parameter: one canonical casing, no
+    way to resurrect the legacy lowercase twins."""
+    payload = _pythonize(payload)
+    validate_payload(name, payload)
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-    path = RESULTS_DIR / f"{prefix}{name}.json"
+    path = RESULTS_DIR / f"{ARTIFACT_PREFIX}{name}.json"
     with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=str)
+        json.dump(payload, f, indent=1, allow_nan=False)
     return path
 
 

@@ -9,10 +9,14 @@ bottleneck latency per cell.  The paper's qualitative claims checked here:
 
 from __future__ import annotations
 
+import numpy as np
+
 from repro.core.model_zoo import PAPER_MODELS
 from repro.core.simulate import aggregate, sweep
 
 from benchmarks.common import save, table
+
+ARTIFACT = "fig3"  # results/BENCH_fig3.json
 
 CAPACITY_FRACS = [0.15, 0.3, 0.6]  # node capacity as a fraction of model size
 NODE_COUNTS = [4, 8, 12]
@@ -43,7 +47,13 @@ def run(trials: int = 12, seed: int = 0) -> dict:
     rows = [
         {
             "model": k[0], "capacity_mb": k[1] / 1e6, "nodes": k[2],
-            "classes": k[3], **{m: round(v, 6) for m, v in vals.items()},
+            "classes": k[3],
+            # cells with zero feasible trials aggregate to inf/0; encode the
+            # missing mean as None so the artifact stays valid JSON
+            **{
+                m: (None if not np.isfinite(v) else round(v, 6))
+                for m, v in vals.items()
+            },
         }
         for k, vals in cells.items()
     ]
@@ -60,7 +70,7 @@ def run(trials: int = 12, seed: int = 0) -> dict:
             "improvement_x": max(lats) / min(lats),
         }
     payload = {"rows": rows, "claims": claims, "trials": trials}
-    save("fig3", payload)
+    save(ARTIFACT, payload)
     print(table(
         [dict(model=m, **c) for m, c in claims.items()],
         ["model", "worst_s", "best_s", "improvement_x"],

@@ -15,6 +15,8 @@ from repro.core.simulate import random_cluster
 
 from benchmarks.common import save, table
 
+ARTIFACT = "joint_opt"  # results/BENCH_joint_opt.json
+
 
 def run(trials: int = 16, n_nodes: int = 8, capacity_frac: float = 0.3, seed: int = 0) -> dict:
     sequential = get_strategy("joint", "sequential")
@@ -48,7 +50,7 @@ def run(trials: int = 16, n_nodes: int = 8, capacity_frac: float = 0.3, seed: in
         "n_nodes": n_nodes,
         "capacity_frac": capacity_frac,
     }
-    save("joint_opt", payload)
+    save(ARTIFACT, payload)
     print(table(rows, ["model", "seq_mean_s", "joint_mean_s", "mean_speedup_x",
                        "max_speedup_x", "n"],
                 "Sequential (paper) vs joint partition+placement"))

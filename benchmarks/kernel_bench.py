@@ -15,6 +15,8 @@ from repro.kernels.quantize.ops import dequantize_int8, quantize_int8
 
 from benchmarks.common import save, table
 
+ARTIFACT = "kernels"  # results/BENCH_kernels.json
+
 
 def _time(fn, *args, reps=3):
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
@@ -56,7 +58,7 @@ def run() -> dict:
         "hbm_traffic_ratio_naive/flash": 2.0 * x.dtype.itemsize / (1 + 4 / 256),
     })
     payload = {"rows": rows}
-    save("kernels", payload)
+    save(ARTIFACT, payload)
     print(table(rows, ["kernel", "seq", "cpu_ms", "naive_cpu_ms",
                        "hbm_traffic_ratio_naive/flash"], "Kernel microbench"))
     return payload

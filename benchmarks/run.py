@@ -2,10 +2,11 @@
 
   PYTHONPATH=src python -m benchmarks.run [--fast]
 
-Besides each module's own stdout table, the driver persists every payload a
-benchmark returns as ``results/BENCH_<module>.json`` (throughput windows,
-bottleneck latencies, strategy names) so the perf trajectory is diffable
-across PRs instead of living only in CI logs.
+Each benchmark module persists its payload as ``results/BENCH_<name>.json``
+(single canonical casing, schema-validated by ``benchmarks.common.save``) so
+the perf trajectory is diffable across PRs instead of living only in CI
+logs.  The driver just sequences the modules and reports where the
+artifacts landed.
 """
 
 from __future__ import annotations
@@ -13,16 +14,8 @@ from __future__ import annotations
 import argparse
 import sys
 import time
-from pathlib import Path
 
-from benchmarks.common import save
-
-
-def _save_bench_artifact(module_name: str, payload) -> Path | None:
-    """Machine-readable per-PR artifact: results/BENCH_<module>.json."""
-    if not isinstance(payload, dict):
-        return None
-    return save(module_name, payload, prefix="BENCH_")
+from benchmarks.common import ARTIFACT_PREFIX, RESULTS_DIR
 
 
 def main() -> int:
@@ -44,35 +37,41 @@ def main() -> int:
     trials_fig3 = 4 if args.fast else 12
     trials = 6 if args.fast else 16
     benches = {
-        # name -> (module basename for the BENCH_ artifact, runner)
-        "fig3": ("fig3_bottleneck", lambda: fig3_bottleneck.run(trials=trials_fig3)),
-        "throughput": ("throughput_scaling", lambda: throughput_scaling.run(trials=trials)),
-        "approx_ratio": ("approx_ratio", lambda: approx_ratio.run(trials=max(trials, 8))),
-        "joint_opt": ("joint_opt", lambda: joint_opt.run(trials=trials)),
-        "algo_scaling": ("algo_scaling", algo_scaling.run),
-        "kernels": ("kernel_bench", kernel_bench.run),
-        "churn": ("churn_throughput",
+        # name -> (module, runner); each module's ARTIFACT names its payload
+        "fig3": (fig3_bottleneck, lambda: fig3_bottleneck.run(trials=trials_fig3)),
+        "throughput": (throughput_scaling,
+                       lambda: throughput_scaling.run(
+                           requests=32 if args.fast else 96)),
+        "approx_ratio": (approx_ratio, lambda: approx_ratio.run(trials=max(trials, 8))),
+        "joint_opt": (joint_opt, lambda: joint_opt.run(trials=trials)),
+        "algo_scaling": (algo_scaling, algo_scaling.run),
+        "kernels": (kernel_bench, kernel_bench.run),
+        "churn": (churn_throughput,
                   lambda: churn_throughput.run(per_phase=8 if args.fast else 40)),
     }
     failures = []
-    for name, (module_name, fn) in benches.items():
+    for name, (module, fn) in benches.items():
         if args.only and name != args.only:
             continue
         print(f"\n### {name} ###", flush=True)
         t0 = time.time()
         try:
-            payload = fn()
-            artifact = _save_bench_artifact(module_name, payload)
-            suffix = f"; artifact {artifact}" if artifact else ""
-            print(f"[{name}] done in {time.time()-t0:.1f}s{suffix}", flush=True)
+            fn()
+            artifact = RESULTS_DIR / f"{ARTIFACT_PREFIX}{module.ARTIFACT}.json"
+            # freshness, not mere existence: a stale file from an earlier
+            # run must not mask a benchmark that stopped calling save()
+            if not artifact.exists() or artifact.stat().st_mtime < t0:
+                raise RuntimeError(f"{name} did not write {artifact}")
+            print(f"[{name}] done in {time.time()-t0:.1f}s; artifact {artifact}",
+                  flush=True)
         except Exception as e:  # pragma: no cover
             failures.append((name, repr(e)))
             print(f"[{name}] FAILED: {e!r}", flush=True)
     if failures:
         print("\nFAILURES:", failures)
         return 1
-    print("\nall benchmarks complete; results under results/ "
-          "(bench_*.json per module, BENCH_*.json per-PR artifacts)")
+    print(f"\nall benchmarks complete; schema-validated artifacts under "
+          f"{RESULTS_DIR}/ ({ARTIFACT_PREFIX}*.json)")
     return 0
 
 

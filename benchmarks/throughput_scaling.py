@@ -1,88 +1,135 @@
-"""The paper's headline claim: "improve the inference pipeline throughput by
-200% by utilizing sufficient numbers of resource-constrained nodes."
+"""The paper's headline claim, measured EMPIRICALLY: "improve the inference
+pipeline throughput by 200% by utilizing sufficient numbers of
+resource-constrained nodes."
 
-Throughput (1/bottleneck) vs number of nodes, at fixed (small) node
-capacity, relative to the minimum-viable cluster.  Also reports the random-
-and greedy-placement baselines to isolate the algorithm's contribution.
-Every placer runs through the same ``Planner`` the deployment facade uses,
-resolved by registry name, so the comparison covers exactly the strategies
-a ``DeploymentSpec`` can name.
+Earlier revisions of this benchmark reported the *analytic* placement
+throughput (1/bottleneck).  This one actually serves a request stream twice
+per cluster size through the ``deploy(spec)`` facade:
+
+  * ``serving="sync"``      -- the synchronous baseline: one microbatch
+    traverses the whole chain per admission round, so throughput decays with
+    pipeline depth (1 / end-to-end time);
+  * ``serving="pipelined"`` -- the discrete-event engine: every partition
+    works on a different microbatch, so throughput holds at the bottleneck
+    stage's rate (the paper's Fig. 5 shape: ~flat in depth).
+
+Reported per cluster size: partition count, the Planner's predicted
+bottleneck throughput, both measured steady-state rates, and the speedup.
+The run asserts the paper's claim: at >= 8 partitions the pipelined engine
+delivers >= 2x the synchronous baseline.
+
+  PYTHONPATH=src python -m benchmarks.throughput_scaling [--requests N]
 """
 
 from __future__ import annotations
 
-import numpy as np
+import argparse
 
-from repro.api import Planner
-from repro.core.model_zoo import PAPER_MODELS
-from repro.core.simulate import random_cluster
+import jax.numpy as jnp
+
+from repro.api import ClusterSpec, DeploymentSpec, deploy
+from repro.core.graph import Layer, LayerGraph
 
 from benchmarks.common import save, table
 
-PLACERS = ("color_coding", "greedy", "random")
+ARTIFACT = "throughput_scaling"  # results/BENCH_throughput_scaling.json
+
+N_LAYERS = 24
+PARAM_BYTES = 1_000_000  # per layer (int8-quantized weights)
+ACT_BYTES = 1_000_000  # per boundary activation
+FLOPS = 2_000_000  # per layer
+NODE_COUNTS = (3, 4, 6, 8, 10, 12)
 
 
-def _trial_throughput(planner, graph, capacity, n, seed):
-    comm = random_cluster(n, capacity, seed=seed)
-    plan = planner.plan(
-        graph, comm, capacity=capacity, max_parts=n, seed=seed, dispatcher=0,
+def _graph() -> LayerGraph:
+    layers = tuple(
+        Layer(f"l{i}", param_bytes=PARAM_BYTES, out_bytes=ACT_BYTES, flops=FLOPS)
+        for i in range(N_LAYERS)
     )
-    return plan.placement.throughput if plan.feasible else None
+    return LayerGraph("synth24", layers, in_bytes=ACT_BYTES // 4)
 
 
-def run(trials: int = 16, capacity_frac: float = 0.25, seed: int = 0) -> dict:
-    node_counts = [3, 4, 6, 8, 10, 12]
-    planners = {
-        "color_coding": Planner(placer="color_coding", n_classes=8),
-        "greedy": Planner(placer="greedy", n_classes=4),
-        "random": Planner(placer="random", n_classes=4),
-    }
+def _measure(spec: DeploymentSpec, requests: int) -> tuple[float, dict]:
+    dep = deploy(spec)
+    for _ in range(requests):
+        dep.submit(jnp.ones((4,)))
+    dep.drain()
+    assert len(dep.loop.failed) == 0
+    assert len(dep.loop.completed) == requests
+    if hasattr(dep.loop, "steady_state_throughput"):
+        rate = dep.loop.steady_state_throughput()
+    else:  # sync loop: constant per-round cost, the mean IS the steady state
+        rate = dep.loop.metrics()["throughput"]
+    return float(rate), dep.plan.summary()
+
+
+def run(requests: int = 96, seed: int = 0) -> dict:
+    graph = _graph()
     rows = []
-    for model, fn in PAPER_MODELS.items():
-        graph = fn()
-        biggest = max(l.param_bytes for l in graph.layers)
-        capacity = max(capacity_frac * graph.total_param_bytes, 1.05 * biggest)
-        base_tp = None
-        for n in node_counts:
-            tps = {name: [] for name in PLACERS}
-            for t in range(trials):
-                for name in PLACERS:
-                    tp = _trial_throughput(
-                        planners[name], graph, capacity, n, seed + 31 * t
-                    )
-                    if tp is not None:
-                        tps[name].append(tp)
-            if not tps["color_coding"]:
-                continue
-            tp = float(np.mean(tps["color_coding"]))
-            if base_tp is None:
-                base_tp = tp
-            rows.append({
-                "model": model, "nodes": n,
-                "throughput": tp,
-                "gain_pct": 100.0 * (tp / base_tp - 1.0),
-                "vs_greedy_x": tp / float(np.mean(tps["greedy"]))
-                if tps["greedy"] else float("nan"),
-                "vs_random_x": tp / float(np.mean(tps["random"]))
-                if tps["random"] else float("nan"),
-            })
-    claims = {}
-    for model in PAPER_MODELS:
-        gains = [r["gain_pct"] for r in rows if r["model"] == model]
-        if gains:
-            claims[model] = {"max_gain_pct": max(gains)}
+    for n in NODE_COUNTS:
+        # smallest per-node capacity that still packs the chain into <= n
+        # contiguous parts (ceil division), so partition count tracks n
+        layers_per_part = -(-N_LAYERS // n)
+        capacity = layers_per_part * PARAM_BYTES * 1.05
+        base = dict(
+            model=graph,
+            cluster=ClusterSpec(n_nodes=n, capacity_bytes=capacity, seed=seed + 3),
+            capacity=capacity,
+            seed=seed,
+            microbatch=1,
+        )
+        pipe_rate, plan = _measure(
+            DeploymentSpec(serving="pipelined", **base), requests)
+        sync_rate, _ = _measure(DeploymentSpec(serving="sync", **base), requests)
+        predicted = float(plan["predicted_throughput"])
+        rows.append({
+            "nodes": n,
+            "parts": len(plan["path"]),
+            "predicted": predicted,
+            "pipelined": pipe_rate,
+            "sync": sync_rate,
+            "speedup_x": pipe_rate / sync_rate if sync_rate > 0 else 0.0,
+            "vs_predicted": pipe_rate / predicted if predicted > 0 else 0.0,
+        })
+    deep = [r for r in rows if r["parts"] >= 8]
+    base_tp = rows[0]["pipelined"]
+    claims = {
+        # the paper's 200% improvement: pipelined vs synchronous execution
+        "max_speedup_x": max(r["speedup_x"] for r in rows),
+        "speedup_at_8plus_parts_x": min(r["speedup_x"] for r in deep) if deep else 0.0,
+        # Fig. 5 shape: pipelined throughput tracks the bottleneck rate, it
+        # does not decay with partition count the way the sync baseline does
+        "pipelined_depth_ratio": min(r["pipelined"] for r in rows) / base_tp,
+        "sync_depth_ratio": min(r["sync"] for r in rows) / rows[0]["sync"],
+    }
     payload = {
         "rows": rows,
         "claims": claims,
-        "strategies": {"partitioner": "min_bottleneck", "placers": list(PLACERS)},
-        "capacity_frac": capacity_frac,
-        "trials": trials,
+        "model": graph.name,
+        "requests": requests,
+        "serving": {"engine": "pipelined discrete-event", "baseline": "sync"},
     }
-    save("throughput_scaling", payload)
-    print(table(rows, ["model", "nodes", "throughput", "gain_pct", "vs_greedy_x", "vs_random_x"],
-                "Throughput vs cluster size (paper: up to +200%)"))
+    save(ARTIFACT, payload)
+    print(table(rows, ["nodes", "parts", "predicted", "pipelined", "sync",
+                       "speedup_x", "vs_predicted"],
+                "Measured serving throughput vs cluster size (paper: +200%)"))
+    print(f"claims: {claims}")
+    assert deep, "no configuration reached 8 partitions"
+    assert claims["speedup_at_8plus_parts_x"] >= 2.0, (
+        f"pipelined engine must be >= 2x the synchronous baseline at >= 8 "
+        f"partitions, got {claims['speedup_at_8plus_parts_x']:.2f}x"
+    )
     return payload
 
 
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(requests=args.requests, seed=args.seed)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

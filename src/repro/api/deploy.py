@@ -27,6 +27,7 @@ import numpy as np
 from repro.api.planner import Plan, Planner
 from repro.api.spec import DeploymentSpec
 from repro.cluster.controlplane import ControlPlane, ObservedState, ReconcileAction
+from repro.cluster.engine import PipelinedServingLoop
 from repro.cluster.events import ClusterEvent, NodeJoined
 from repro.cluster.lifecycle import EdgeCluster
 from repro.cluster.serving import Request, ServingLoop
@@ -92,7 +93,13 @@ class Deployment:
     ):
         self.spec = spec
         self.control = control
-        self.loop = ServingLoop(control, microbatch=spec.microbatch)
+        if spec.serving == "sync":
+            self.loop = ServingLoop(control, microbatch=spec.microbatch)
+        else:
+            self.loop = PipelinedServingLoop(
+                control, microbatch=spec.microbatch,
+                queue_depth=spec.queue_depth,
+            )
         self.watcher = ModelWatcher(control.store)
         self.positions = positions  # node positions for random clusters (growth)
 

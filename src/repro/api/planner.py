@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
-from typing import TYPE_CHECKING
+from typing import TYPE_CHECKING, Sequence
 
 from repro.api.registry import default_strategy, get_strategy
 from repro.core.bottleneck import evaluate_pipeline
@@ -169,7 +169,7 @@ class Planner:
         seed: int | None = None,
         include_dispatcher: bool = True,
         dispatcher: int | None = None,
-        device_flops: float | None = None,
+        device_flops: float | Sequence[float] | None = None,
         compression_ratio: float = 1.0,
     ) -> Plan:
         """Partition + place ``graph`` on ``comm``; score the result.
@@ -213,8 +213,8 @@ class Planner:
             return Plan(version, part, place, strategies=self.strategy_names())
         metrics = evaluate_pipeline(
             part.partitions, place.path, comm,
-            device_flops=device_flops, in_bytes=in_bytes, dispatcher=dispatcher,
-            compression_ratio=compression_ratio,
+            device_flops=device_flops, in_bytes=in_bytes, out_bytes=out_bytes,
+            dispatcher=dispatcher, compression_ratio=compression_ratio,
         )
         return Plan(
             version, part, place,

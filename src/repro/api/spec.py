@@ -142,6 +142,14 @@ class DeploymentSpec:
         (timing-only simulation).
     microbatch:
         serving-loop admission batch size.
+    serving:
+        ``"pipelined"`` (default) serves through the discrete-event engine
+        (``cluster.engine.PipelinedServingLoop``: every partition advances
+        independently, throughput = bottleneck rate); ``"sync"`` uses the
+        synchronous baseline loop (one microbatch through the whole chain
+        per round, throughput = 1 / end-to-end time).
+    queue_depth:
+        pipelined mode only: bound on each stage's in-queue (backpressure).
     """
 
     model: Any
@@ -157,6 +165,8 @@ class DeploymentSpec:
     min_throughput: float | None = None
     executor_for_version: Callable | None = None
     microbatch: int = 4
+    serving: str = "pipelined"
+    queue_depth: int = 2
 
     def __post_init__(self) -> None:
         if isinstance(self.cluster, CommGraph):
@@ -228,6 +238,14 @@ class DeploymentSpec:
         if self.compression_ratio <= 0:
             issues.append(SpecIssue("bad_compression",
                                     "compression_ratio must be > 0"))
+
+        if self.serving not in ("pipelined", "sync"):
+            issues.append(SpecIssue(
+                "bad_serving",
+                f"serving must be 'pipelined' or 'sync', got {self.serving!r}",
+            ))
+        if self.queue_depth < 1:
+            issues.append(SpecIssue("bad_serving", "queue_depth must be >= 1"))
 
         # capacity feasibility: report WHY, naming the offending layer
         if graph is not None and cluster_ok:

@@ -12,6 +12,7 @@ from repro.cluster.events import (
     NodeJoined,
     VersionBumped,
 )
+from repro.cluster.engine import Microbatch, PipelinedServingLoop, StageState
 from repro.cluster.lifecycle import EdgeCluster, InferencePipeline, Node, Pod
 from repro.cluster.serving import Request, ServingLoop
 from repro.cluster.store import ArtifactStore
@@ -27,14 +28,17 @@ __all__ = [
     "EdgeCluster",
     "InferencePipeline",
     "LinkDegraded",
+    "Microbatch",
     "ModelWatcher",
     "Node",
     "NodeFailed",
     "NodeJoined",
     "ObservedState",
+    "PipelinedServingLoop",
     "Pod",
     "ReconcileAction",
     "Request",
     "ServingLoop",
+    "StageState",
     "VersionBumped",
 ]

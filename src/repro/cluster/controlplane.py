@@ -218,6 +218,16 @@ class ControlPlane:
     def pending(self) -> int:
         return len(self._events)
 
+    def pending_events(self) -> tuple[ClusterEvent, ...]:
+        """Snapshot of the queued (not yet reconciled) events.
+
+        The pipelined serving engine reads this *before* calling
+        ``reconcile()`` to compute which stages a pending ``NodeFailed``
+        is about to kill -- the pods are only marked dead during
+        reconciliation, but the in-flight microbatches resident on them
+        must be requeued, not carried."""
+        return tuple(self._events)
+
     # -- reconciliation ------------------------------------------------------
     def reconcile(self) -> list[ReconcileAction]:
         """Drain the queue, converge observed -> desired, log the actions."""

@@ -69,6 +69,10 @@ class Dispatcher:
         self.probed: CommGraph | None = None
         self.last_plan: Plan | None = None  # most recent feasible plan
 
+    def node_flops(self) -> list[float]:
+        """Per-node compute rates, indexed by node id (0 = unmodelled)."""
+        return [n.flops_per_s for n in self.cluster.nodes]
+
     # -- Sec 2.1: system initialization --------------------------------------
     def reset(self) -> None:
         """Forget leader + probed bandwidths (the paper's full cluster
@@ -115,6 +119,7 @@ class Dispatcher:
             seed=int(self.rng.integers(1 << 31)),
             include_dispatcher=include_dispatcher,
             dispatcher=self.leader if include_dispatcher else None,
+            device_flops=self.node_flops(),
             compression_ratio=compression_ratio,
         )
         if plan.feasible:
@@ -211,7 +216,10 @@ class Dispatcher:
 
             metrics = evaluate_pipeline(
                 part, place.path, comm,
-                in_bytes=graph.in_bytes, dispatcher=self.leader,
+                device_flops=self.node_flops(),
+                in_bytes=graph.in_bytes,
+                out_bytes=graph.layers[-1].out_bytes,
+                dispatcher=self.leader,
                 compression_ratio=pipeline.compression_ratio,
             )
             self.last_plan = dataclasses.replace(

@@ -13,11 +13,19 @@ happens), and the requests are retried on the repaired pipeline -- so
 every admitted request either completes or is retried across a recovery,
 never silently lost (up to ``max_attempts``).
 
-Time is simulated: each successful round advances the clock by the trace's
-steady-state period (pipelined admission -- one microbatch completes per
-period once the pipe is full), and each non-trivial reconcile adds
+Time is simulated: each successful round advances the clock by the
+**end-to-end time** (sum of stage compute and link times, dispatcher
+input/output hops included, on the probed bandwidths -- the same
+``service_times`` model the pipelined engine uses) -- the honest cost of
+synchronous execution, where the next microbatch is only admitted once
+the previous one has left the last stage.  Each non-trivial reconcile adds
 ``recovery_penalty_s`` (pod restart + re-placement cost).  Completion
 timestamps let benchmarks window throughput before/during/after churn.
+
+This loop is the *baseline*.  ``cluster.engine.PipelinedServingLoop`` keeps
+every partition busy on a different microbatch and reaches the bottleneck
+rate ``1 / max(stage, link time)`` instead of ``1 / sum`` -- the paper's
+pipeline-parallel throughput model (and the source of its 200% claim).
 """
 
 from __future__ import annotations
@@ -98,7 +106,7 @@ class ServingLoop:
             self._requeue(batch)
             self._reconcile()
             return []
-        self.clock_s += trace.period_s
+        self.clock_s += self._round_e2e_s(trace)
         for i, req in enumerate(batch):
             req.result = ys[i]
             req.completed_s = self.clock_s
@@ -109,6 +117,7 @@ class ServingLoop:
         """Serving-side counters for ``Deployment.metrics()`` / benchmarks."""
         done = len(self.completed)
         return {
+            "mode": "sync",
             "completed": done,
             "failed": len(self.failed),
             "backlog": len(self.queue),
@@ -125,6 +134,34 @@ class ServingLoop:
                 break
             done.extend(self.step())
         return done
+
+    def _round_e2e_s(self, trace) -> float:
+        """End-to-end cost of one synchronous round, on the SAME timing
+        model as the pipelined engine (``core.bottleneck.service_times``:
+        probed bandwidths, dispatcher input/output hops included) -- so the
+        pipelined-vs-sync comparison isolates execution discipline, not a
+        timing-model delta.  Falls back to the pipeline's own trace when the
+        dispatcher has no probed view (direct lifecycle use)."""
+        control = self.control
+        disp = control.dispatcher
+        pipe = control.pipeline
+        if disp.probed is None or control.desired is None:
+            return trace.e2e_s
+        from repro.core.bottleneck import service_times
+
+        graph = control.desired.graph
+        compute_s, link_s = service_times(
+            [p.partition for p in pipe.pods],
+            [p.node_id for p in pipe.pods],
+            disp.probed.bw,
+            flops_per_node=[n.flops_per_s for n in control.cluster.nodes],
+            in_bytes=graph.in_bytes,
+            out_bytes=graph.layers[-1].out_bytes,
+            dispatcher=disp.leader,
+            compression_ratio=pipe.compression_ratio,
+        )
+        finite = [s for s in compute_s + link_s if s != float("inf")]
+        return sum(finite)
 
     # -- recovery internals ----------------------------------------------------
     def _requeue(self, batch: list[Request]) -> None:

@@ -38,37 +38,88 @@ def link_latencies(
     return out
 
 
+def service_times(
+    partitions: Sequence[Partition],
+    path: Sequence[int],
+    bw: np.ndarray,
+    *,
+    flops_per_node: float | Sequence[float] | None = None,
+    in_bytes: float = 0.0,
+    out_bytes: float = 0.0,
+    dispatcher: int | None = None,
+    compression_ratio: float = 1.0,
+) -> tuple[list[float], list[float]]:
+    """The single timing model shared by the discrete-event serving engine,
+    the planner's prediction, and the TPU pipeline planner.
+
+    Returns ``(compute_s, link_s)``:
+
+      * ``compute_s[i]`` -- stage i's service time, ``partition.flops /
+        flops_per_node[path[i]]`` (0 when flops are unmodelled),
+      * ``link_s`` -- one entry per *hop*, ``len(path) + 1`` long:
+        ``link_s[0]`` is the dispatcher -> first-stage input transfer,
+        ``link_s[h]`` (1 <= h <= k-1) is the stage h-1 -> stage h boundary,
+        ``link_s[k]`` is the last-stage -> dispatcher output transfer.
+        Colocated endpoints (or zero bytes, or no dispatcher) cost 0.
+
+    The pipeline's steady-state period is ``max(compute_s + link_s)`` --
+    every stage and every link is a serial resource, so the bottleneck one
+    sets the cadence once the pipe is full.
+    """
+
+    def hop(a: int | None, b: int | None, bytes_: float) -> float:
+        if bytes_ <= 0 or a is None or b is None or a == b:
+            return 0.0
+        rate = float(bw[a, b])
+        return float("inf") if rate <= 0 else (bytes_ / compression_ratio) / rate
+
+    compute = []
+    for part, node in zip(partitions, path):
+        if flops_per_node is None:
+            compute.append(0.0)
+        else:
+            f = (
+                float(flops_per_node)
+                if np.isscalar(flops_per_node)
+                else float(flops_per_node[node])
+            )
+            compute.append(part.flops / f if f > 0 else 0.0)
+    links = [hop(dispatcher, path[0] if path else None, in_bytes)]
+    for i in range(len(path) - 1):
+        links.append(hop(path[i], path[i + 1], float(partitions[i].out_bytes)))
+    links.append(hop(path[-1] if path else None, dispatcher, out_bytes))
+    return compute, links
+
+
 def evaluate_pipeline(
     partitions: Sequence[Partition],
     path: Sequence[int],
     comm: CommGraph,
     device_flops: float | Sequence[float] | None = None,
     in_bytes: float = 0.0,
+    out_bytes: float = 0.0,
     dispatcher: int | None = None,
     compression_ratio: float = 1.0,
 ) -> PipelineMetrics:
     """Score a (partition, placement) pair.
 
     ``compression_ratio`` models boundary compression (paper: ZFP/LZ4; ours:
-    blockwise int8): transferred bytes are divided by it.
+    blockwise int8): transferred bytes are divided by it.  ``in_bytes`` /
+    ``out_bytes`` charge the dispatcher round-trip hops when ``dispatcher``
+    is given (colocation costs nothing).
     """
     if len(path) != len(partitions):
         raise ValueError("path length != number of partitions")
-    boundaries = [p.out_bytes / compression_ratio for p in partitions[:-1]]
-    lats = link_latencies(boundaries, path, comm)
-    if dispatcher is not None and in_bytes > 0 and len(path) > 0:
-        b = comm.bw[dispatcher, path[0]]
-        lats = [float("inf") if b <= 0 else (in_bytes / compression_ratio) / b] + lats
+    compute, hops = service_times(
+        partitions, path, comm.bw,
+        flops_per_node=device_flops,
+        in_bytes=in_bytes if dispatcher is not None else 0.0,
+        out_bytes=out_bytes if dispatcher is not None else 0.0,
+        dispatcher=dispatcher,
+        compression_ratio=compression_ratio,
+    )
+    lats = [h for h in hops if h > 0]
     bottleneck = max(lats, default=0.0)
-    if device_flops is None:
-        compute = [0.0] * len(partitions)
-    else:
-        flops = (
-            [float(device_flops)] * len(partitions)
-            if np.isscalar(device_flops)
-            else [float(device_flops[node]) for node in path]
-        )
-        compute = [p.flops / f if f > 0 else float("inf") for p, f in zip(partitions, flops)]
     period = max([bottleneck] + compute)
     e2e = sum(compute) + sum(l for l in lats if np.isfinite(l))
     return PipelineMetrics(

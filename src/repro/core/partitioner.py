@@ -26,8 +26,9 @@ can score infeasible configs.
 Every algorithm self-registers in the strategy registry
 (``repro.api.registry``) under the names the declarative API uses:
 ``min_bottleneck`` (default), ``paper_greedy``, ``min_sum``, ``exact_k``
-(minimal-part-count variant), ``exhaustive``.  The shared registered
-signature is ``fn(graph, capacity, max_parts=None) -> PartitionResult``.
+(minimal-part-count variant), ``uniform`` (equal-layer-count baseline),
+``exhaustive``.  The shared registered signature is
+``fn(graph, capacity, max_parts=None) -> PartitionResult``.
 """
 
 from __future__ import annotations
@@ -318,6 +319,43 @@ def partition_fewest_parts(
     if cuts is None:
         return _infeasible(algo)
     return partition_exact_k(graph, capacity, len(cuts) + 1)
+
+
+# ---------------------------------------------------------------------------
+# Uniform split (algorithm-free baseline)
+# ---------------------------------------------------------------------------
+
+@register_strategy(
+    "partitioner", "uniform",
+    description="equal-layer-count split at the fewest feasible parts (baseline)",
+)
+def partition_uniform(
+    graph: LayerGraph, capacity: int, max_parts: int | None = None
+) -> PartitionResult:
+    """Split into k near-equal-layer-count parts, smallest feasible k.
+
+    The no-algorithm baseline: cut positions ignore edge weights entirely
+    (cut after layer ``round(i * n / k)`` for i = 1..k-1), so its min-max cut
+    is whatever those arbitrary edges happen to weigh.  ``exact_k`` at the
+    same k is optimal among k-part partitions, which the property suite
+    exploits as an ordering oracle.
+    """
+    algo = "uniform"
+    if not _fits(graph, capacity):
+        return _infeasible(algo)
+    n = len(graph)
+    kmax = min(max_parts, n) if max_parts is not None else n
+    for k in range(1, kmax + 1):
+        # strictly increasing for k <= n (consecutive targets differ by
+        # n/k >= 1), so every part is non-empty
+        bounds = [round(i * n / k) for i in range(k + 1)]
+        if all(
+            graph.segment_param_bytes(bounds[i], bounds[i + 1]) <= capacity
+            for i in range(k)
+        ):
+            cuts = [b - 1 for b in bounds[1:-1]]
+            return _result(graph, cuts, algo)
+    return _infeasible(algo)
 
 
 # ---------------------------------------------------------------------------

@@ -38,6 +38,8 @@ def serve_edge(
     joint: str | None = None,
     capacity_frac: float = 1 / 3,
     width: int = 32,
+    serving: str = "pipelined",
+    queue_depth: int = 2,
 ) -> int:
     """Edge-cluster serving demo: deploy(spec) -> stream -> kill -> recover."""
     graph, executor_for_version = demo_mlp(d=width)
@@ -52,12 +54,15 @@ def serve_edge(
         joint=joint,
         seed=seed,
         microbatch=4,
+        serving=serving,
+        queue_depth=queue_depth,
     )
     d = deploy(spec)
     obs = d.observed()
     names = dict(d.plan.strategies)
-    print(f"edge serving [{names}]: {len(obs.path)} partitions on nodes "
-          f"{list(obs.path)}, bottleneck {obs.bottleneck_latency*1e3:.3f} ms")
+    print(f"edge serving [{names}, {serving}]: {len(obs.path)} partitions on "
+          f"nodes {list(obs.path)}, bottleneck {obs.bottleneck_latency*1e3:.3f} ms, "
+          f"predicted {d.plan.predicted_throughput:.1f} microbatch/s")
     for _ in range(requests):
         d.submit(jnp.ones((width,)) * 0.1)
     half = requests // 2
@@ -74,6 +79,10 @@ def serve_edge(
     print(f"served {m['serving']['completed']}/{requests} requests "
           f"(lost {m['serving']['failed']}) in {m['serving']['clock_s']:.3f} "
           f"simulated s; final path {m['path']}, actions: {m['reconcile_actions']}")
+    for st in m["serving"].get("stages", ()):
+        print(f"  stage {st['stage']} on node {st['node']}: "
+              f"occupancy {st['occupancy']:.2f}, mean queue {st['mean_queue']:.2f}, "
+              f"max queue {st['max_queue']}, {st['microbatches']} microbatches")
     return 0
 
 
@@ -101,6 +110,12 @@ def main() -> int:
                     help="edge mode per-node capacity as a fraction of model bytes")
     ap.add_argument("--width", type=int, default=32,
                     help="edge mode demo-MLP width (d)")
+    ap.add_argument("--serving", default="pipelined",
+                    choices=("pipelined", "sync"),
+                    help="edge mode serving engine (discrete-event pipeline "
+                         "vs synchronous baseline)")
+    ap.add_argument("--queue-depth", type=int, default=2,
+                    help="edge mode per-stage in-queue bound (pipelined only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -109,6 +124,7 @@ def main() -> int:
             args.requests, args.nodes, args.seed,
             partitioner=args.partitioner, placer=args.placer, joint=args.joint,
             capacity_frac=args.capacity_frac, width=args.width,
+            serving=args.serving, queue_depth=args.queue_depth,
         )
     if not args.arch:
         ap.error("--arch is required unless --edge is given")

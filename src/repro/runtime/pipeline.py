@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +27,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.bottleneck import service_times
 from repro.core.graph import LayerGraph
 from repro.core.partitioner import partition_exact_k
 from repro.core.placement import CommGraph, place_optimal
@@ -44,6 +45,10 @@ class PipelinePlan:
     stage_order: tuple[int, ...]  # stage i runs on pod stage_order[i]
     bottleneck_bytes: float
     est_bottleneck_s: float
+    # steady-state GPipe period under the serving engine's timing model
+    # (max over stage compute and link times); 1/est_period_s is the
+    # pipeline's predicted per-microbatch throughput once full
+    est_period_s: float = 0.0
 
 
 def plan_pipeline(
@@ -52,12 +57,17 @@ def plan_pipeline(
     *,
     stage_capacity: float,
     pod_bw: np.ndarray | None = None,
+    device_flops: float | Sequence[float] | None = None,
 ) -> PipelinePlan:
     """Cut the layer graph and place stages on the pod graph.
 
     ``pod_bw``: (n_stages, n_stages) inter-pod bandwidth (bytes/s).  Defaults
     to a DCN ring.  Placement maximizes throughput by matching the heaviest
     boundaries to the fastest links (exact min-bottleneck path).
+
+    ``device_flops`` (per-pod compute rate) feeds the same
+    ``core.bottleneck.service_times`` model the edge serving engine uses, so
+    ``est_period_s`` is comparable across the TPU and edge backends.
     """
     part = partition_exact_k(graph, int(stage_capacity), n_stages)
     if not part.feasible:
@@ -73,12 +83,16 @@ def plan_pipeline(
     )
     if not place.feasible:
         raise ValueError("no feasible stage placement on the pod graph")
+    compute_s, link_s = service_times(
+        part.partitions, place.path, pod_bw, flops_per_node=device_flops
+    )
     return PipelinePlan(
         n_stages=n_stages,
         cuts=part.cuts,
         stage_order=place.path,
         bottleneck_bytes=float(max(part.boundaries, default=0)),
         est_bottleneck_s=float(place.bottleneck_latency),
+        est_period_s=float(max(compute_s + link_s, default=0.0)),
     )
 
 

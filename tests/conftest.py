@@ -9,6 +9,7 @@ import sys
 from pathlib import Path
 
 _ROOT = Path(__file__).resolve().parent.parent
-for p in (str(_ROOT / "src"), str(_ROOT / "tests")):
+# repo root is needed for the ``benchmarks`` package (artifact schema tests)
+for p in (str(_ROOT / "src"), str(_ROOT / "tests"), str(_ROOT)):
     if p not in sys.path:
         sys.path.insert(0, p)

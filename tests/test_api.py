@@ -56,7 +56,8 @@ def _demo_spec(seed=3, **kw):
 
 def test_registry_contains_every_algorithm():
     assert set(list_strategies("partitioner")) == {
-        "min_bottleneck", "paper_greedy", "min_sum", "exact_k", "exhaustive",
+        "min_bottleneck", "paper_greedy", "min_sum", "exact_k", "uniform",
+        "exhaustive",
     }
     assert set(list_strategies("placer")) == {
         "color_coding", "greedy", "random", "optimal",

@@ -1,0 +1,128 @@
+"""Benchmark artifact hygiene: one canonical casing + a validated schema.
+
+The ``results/`` directory used to accumulate duplicated artifacts --
+``BENCH_churn_throughput.json`` (written by the driver) next to a legacy
+lowercase ``bench_churn_throughput.json`` (written by the module).  Now
+``benchmarks.common.save`` is the single writer, always emitting the
+canonical ``BENCH_<name>.json`` and schema-validating the payload first.
+These tests pin the casing, the validator, and every committed artifact.
+"""
+
+import json
+import math
+from pathlib import Path
+
+import pytest
+
+from benchmarks import common
+from benchmarks.common import (
+    ARTIFACT_PREFIX,
+    PayloadSchemaError,
+    save,
+    validate_payload,
+)
+
+# ---------------------------------------------------------------------------
+# Canonical casing
+# ---------------------------------------------------------------------------
+
+def test_save_writes_single_canonical_casing(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path)
+    path = save("demo", {"rows": [{"a": 1}], "meta": "x"})
+    assert path.name == f"{ARTIFACT_PREFIX}demo.json"
+    assert [p.name for p in tmp_path.iterdir()] == [f"{ARTIFACT_PREFIX}demo.json"]
+    assert json.loads(path.read_text())["rows"] == [{"a": 1}]
+
+
+def test_no_code_path_writes_legacy_lowercase_artifacts():
+    """The duplicated lowercase twins (``bench_*.json`` next to
+    ``BENCH_*.json``) are gone and must stay gone: no benchmark passes a
+    lowercase prefix to ``save()`` and the default is the canonical one.
+    (Deliberately checks the *code*, not the gitignored results/ dir, so a
+    developer's stale local artifacts cannot fail tier-1.)"""
+    assert ARTIFACT_PREFIX == "BENCH_"
+    bench_dir = Path(__file__).resolve().parent.parent / "benchmarks"
+    offenders = [
+        p.name for p in bench_dir.glob("*.py")
+        if 'prefix="bench_"' in p.read_text() or "prefix='bench_'" in p.read_text()
+    ]
+    assert offenders == [], f"lowercase artifact prefix reintroduced: {offenders}"
+
+
+def test_churn_benchmark_emits_a_valid_canonical_artifact(tmp_path, monkeypatch):
+    """End to end: a real benchmark run writes exactly one BENCH_ artifact
+    that round-trips through strict JSON and the schema."""
+    from benchmarks import churn_throughput
+
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path)
+    churn_throughput.run(per_phase=4)
+    (path,) = tmp_path.iterdir()
+    assert path.name == f"{ARTIFACT_PREFIX}churn_throughput.json"
+    payload = json.loads(path.read_text())
+    validate_payload(path.stem, payload)
+    assert payload["serving_mode"] == "pipelined"
+    assert payload["lost_requests"] == 0
+
+
+def test_every_benchmark_declares_its_artifact_name():
+    """run.py (and the CI upload step) resolve artifact paths through each
+    module's ARTIFACT constant -- the single source of the basename."""
+    import importlib
+
+    for mod in ("algo_scaling", "approx_ratio", "churn_throughput",
+                "fig3_bottleneck", "joint_opt", "kernel_bench",
+                "throughput_scaling"):
+        m = importlib.import_module(f"benchmarks.{mod}")
+        assert isinstance(m.ARTIFACT, str) and m.ARTIFACT, mod
+
+
+# ---------------------------------------------------------------------------
+# Schema validator
+# ---------------------------------------------------------------------------
+
+def test_validator_accepts_a_typical_payload():
+    validate_payload("ok", {
+        "rows": [{"nodes": 3, "tp": 1.5, "label": "a", "ok": True},
+                 {"nodes": 4, "tp": 2.5, "label": "b", "ok": False}],
+        "claims": {"max": 2.5},
+        "nested": {"list": [1, 2, [3, 4]], "none": None},
+    })
+
+
+def test_validator_rejects_non_finite_numbers():
+    with pytest.raises(PayloadSchemaError, match="non-finite"):
+        validate_payload("bad", {"x": float("nan")})
+    with pytest.raises(PayloadSchemaError, match="non-finite"):
+        validate_payload("bad", {"rows": [{"v": math.inf}]})
+
+
+def test_validator_rejects_ragged_rows():
+    with pytest.raises(PayloadSchemaError, match="ragged"):
+        validate_payload("bad", {"rows": [{"a": 1}, {"a": 1, "b": 2}]})
+
+
+def test_validator_rejects_non_json_leaves_and_non_dict_payloads():
+    with pytest.raises(PayloadSchemaError, match="non-JSON leaf"):
+        validate_payload("bad", {"x": object()})
+    with pytest.raises(PayloadSchemaError, match="must be a dict"):
+        validate_payload("bad", [1, 2, 3])
+    with pytest.raises(PayloadSchemaError, match="non-empty"):
+        validate_payload("bad", {"rows": []})
+
+
+def test_save_refuses_invalid_payloads(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path)
+    with pytest.raises(PayloadSchemaError):
+        save("bad", {"x": float("inf")})
+    assert list(tmp_path.iterdir()) == []  # nothing half-written
+
+
+def test_save_coerces_numpy_scalars(tmp_path, monkeypatch):
+    np = pytest.importorskip("numpy")
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path)
+    path = save("np", {
+        "rows": [{"n": np.int64(3), "v": np.float64(1.5)}],
+        "arr": np.arange(3),
+    })
+    data = json.loads(path.read_text())
+    assert data["rows"] == [{"n": 3, "v": 1.5}] and data["arr"] == [0, 1, 2]

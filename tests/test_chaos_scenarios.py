@@ -1,0 +1,181 @@
+"""Chaos scenarios: randomized churn interleavings against a live deployment.
+
+Drives a ``ControlPlane`` (through the ``deploy()`` facade and the pipelined
+engine) with randomized sequences of NodeFailed / NodeJoined / VersionBumped
+/ LinkDegraded fired *while serving*, and asserts the control plane's
+contract:
+
+  * **convergence** -- after the stream drains, observed == desired: the
+    deployed version matches the desired version, the path uses only
+    distinct healthy nodes, and the pipeline is healthy with a finite
+    bottleneck;
+  * **generation monotonicity** -- the full-restart counter never goes
+    backwards, and only NodeJoined restarts advance it;
+  * **liveness** -- every submitted request eventually completes (none
+    lost, none duplicated, none failed).
+
+The seed matrix is CI-controllable: ``SEIFER_CHAOS_SEEDS=3,4`` runs seeds
+3 and 4 (tier-2 fans the matrix out across jobs); the default is 0,1,2.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ClusterSpec, DeploymentSpec, deploy
+from repro.cluster import LinkDegraded, NodeFailed, NodeJoined
+from repro.core.model_zoo import demo_mlp
+
+SEEDS = [int(s) for s in os.environ.get("SEIFER_CHAOS_SEEDS", "0,1,2").split(",")]
+
+D = 16
+N_NODES = 8
+N_REQUESTS = 60
+MAX_EVENTS = 12
+
+
+def _deployment(seed):
+    graph, executor_for_version = demo_mlp(d=D)
+    spec = DeploymentSpec(
+        model=graph,
+        executor_for_version=executor_for_version,
+        cluster=ClusterSpec(
+            n_nodes=N_NODES, capacity_bytes=graph.total_param_bytes / 3,
+            seed=seed + 3,
+        ),
+        seed=seed,
+        microbatch=2,
+    )
+    return deploy(spec)
+
+
+def _conserved(dep, submitted_ids):
+    loop = dep.loop
+    everywhere = (
+        [r.req_id for r in loop.completed]
+        + [r.req_id for r in loop.failed]
+        + [r.req_id for r in loop.queue]
+        + [r.req_id for mb in loop._inflight for r in mb.requests]
+    )
+    assert len(everywhere) == len(set(everywhere)), "request duplicated"
+    assert sorted(everywhere) == sorted(submitted_ids), "request lost"
+
+
+def _inject_random_event(dep, rng, state):
+    """Fire one random disturbance; returns its label (or None if skipped)."""
+    cluster = dep.cluster
+    pods = dep.control.pipeline.pods
+    hosting = sum(1 for nd in cluster.nodes if nd.healthy and nd.capacity_bytes > 0)
+    roll = rng.random()
+    if roll < 0.30:
+        # keep enough healthy hosting nodes that recovery stays feasible
+        if hosting <= len(pods) + 1:
+            return None
+        victim = int(pods[rng.integers(len(pods))].node_id)
+        dep.inject(NodeFailed(victim))
+        state["failed"].add(victim)
+        return f"NodeFailed({victim})"
+    if roll < 0.50:
+        if state["failed"]:
+            node = state["failed"].pop()
+            dep.inject(NodeJoined(node_id=node))
+            return f"NodeJoined(heal {node})"
+        dep.grow_cluster(seed=int(rng.integers(1 << 16)))
+        return "NodeJoined(grow)"
+    if roll < 0.75:
+        a, b = (int(x) for x in rng.choice(cluster.n, size=2, replace=False))
+        factor = float(rng.uniform(0.05, 0.8))
+        dep.inject(LinkDegraded(a, b, factor))
+        return f"LinkDegraded({a},{b})"
+    version = dep.observed().version + 1
+    dep.store.publish(version)
+    dep.poll_model_updates()
+    return f"VersionBumped({version})"
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_chaos_converges_and_loses_nothing(seed):
+    dep = _deployment(seed)
+    rng = np.random.default_rng(seed * 7919 + 1)
+    ids = [dep.submit(jnp.ones((D,)) * 0.1).req_id for _ in range(N_REQUESTS)]
+
+    fired = []
+    state = {"failed": set()}
+    last_gen = dep.observed().generation
+    restarts = 0
+    steps = 0
+    while dep.loop.backlog or dep.control.pending:
+        steps += 1
+        assert steps < 10_000, "scenario did not drain"
+        if len(fired) < MAX_EVENTS and rng.random() < 0.2:
+            label = _inject_random_event(dep, rng, state)
+            if label:
+                fired.append(label)
+        dep.step()
+        gen = dep.observed().generation
+        assert gen >= last_gen, "generation went backwards"
+        restarts += gen - last_gen
+        last_gen = gen
+        _conserved(dep, ids)
+
+    assert fired, "no disturbance was injected"
+    # liveness: everything completed, nothing failed
+    assert len(dep.loop.completed) == N_REQUESTS
+    assert not dep.loop.failed
+
+    # convergence: observed == desired
+    obs = dep.observed()
+    assert obs.healthy
+    assert obs.version == dep.control.desired.version
+    assert np.isfinite(obs.bottleneck_latency)
+    path = list(obs.path)
+    assert len(path) == len(set(path)), "placement reuses a node"
+    healthy = set(dep.cluster.healthy_ids())
+    assert set(path) <= healthy, "a pod sits on an unhealthy node"
+    # generation advanced exactly once per full-restart action
+    restart_actions = sum(
+        1 for a in dep.control.history if a.kind == "restart")
+    assert restarts == restart_actions
+
+    # the served math matches the FINAL version's reference on a fresh probe
+    x = jnp.ones((D,)) * 0.1
+    req = dep.submit(x)
+    dep.drain()
+    import jax
+
+    ws = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(obs.version), (8, D, D)) * 0.3
+    )
+    ref = x
+    for w in ws:
+        ref = jnp.tanh(ref @ w)
+    np.testing.assert_allclose(np.asarray(req.result), np.asarray(ref), rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_chaos_event_burst_between_quiet_phases(seed):
+    """A quiet phase, then a burst of back-to-back events reconciled in one
+    go, then another quiet phase: the control plane applies the whole batch
+    and still converges."""
+    dep = _deployment(seed + 100)
+    rng = np.random.default_rng(seed * 104729 + 7)
+    ids = [dep.submit(jnp.ones((D,)) * 0.1).req_id for _ in range(20)]
+    while dep.loop.backlog:
+        dep.step()
+
+    state = {"failed": set()}
+    burst = [lbl for _ in range(5)
+             if (lbl := _inject_random_event(dep, rng, state))]
+    assert dep.control.pending == len(
+        [b for b in burst if not b.startswith("VersionBumped")]
+    ) + sum(b.startswith("VersionBumped") for b in burst)
+
+    ids += [dep.submit(jnp.ones((D,)) * 0.1).req_id for _ in range(20)]
+    while dep.loop.backlog or dep.control.pending:
+        dep.step()
+        _conserved(dep, ids)
+    assert len(dep.loop.completed) == 40 and not dep.loop.failed
+    obs = dep.observed()
+    assert obs.healthy and obs.version == dep.control.desired.version

@@ -1,0 +1,126 @@
+"""Property-based tests over EVERY registered partitioner strategy.
+
+Driven through the ``_hypothesis_compat`` shim (real hypothesis when
+installed, a deterministic seeded fallback otherwise), so the same
+invariants run in both CI legs:
+
+  * **structural**: a feasible result's parts are contiguous, exhaustive
+    (they reconstruct the whole chain), and non-empty;
+  * **capacity**: every part fits the per-node cap; boundary weights match
+    the graph's cut edges;
+  * **ordering oracle**: ``exact_k`` is the optimal min-max cut among
+    k-part partitions, so at ``uniform``'s own part count it can never be
+    beaten by the uniform (equal-layer-count) baseline;
+  * **feasibility consistency**: whenever the exact ``min_bottleneck``
+    solver finds a partition, the baselines that report feasible agree on
+    capacity, and infeasibility of the exact solver implies the heuristics
+    cannot do better at the same part budget.
+"""
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.api import get_strategy, list_strategies
+from repro.core.graph import chain
+from repro.core.partitioner import (
+    partition_exact_k,
+    partition_min_bottleneck,
+    partition_uniform,
+)
+
+SIZES = st.lists(
+    st.tuples(st.integers(1, 50), st.integers(1, 1000)), min_size=2, max_size=9
+)
+
+ALL_PARTITIONERS = sorted(list_strategies("partitioner"))
+
+
+def _graph(sizes):
+    return chain("prop", sizes)
+
+
+@pytest.mark.parametrize("name", ALL_PARTITIONERS)
+def test_parts_contiguous_exhaustive_and_within_capacity(name):
+    fn = get_strategy("partitioner", name).fn
+
+    @settings(max_examples=60, deadline=None)
+    @given(sizes=SIZES, cap=st.integers(10, 300))
+    def prop(sizes, cap):
+        g = _graph(sizes)
+        r = fn(g, cap)
+        if not r.feasible:
+            return
+        parts = r.partitions
+        assert parts, f"{name}: feasible result with no parts"
+        # contiguous + exhaustive: the parts tile [0, n) in order
+        assert parts[0].start == 0
+        assert parts[-1].stop == len(g)
+        for a, b in zip(parts, parts[1:]):
+            assert a.stop == b.start, f"{name}: gap/overlap at {a.stop}"
+        assert all(p.stop > p.start for p in parts), f"{name}: empty part"
+        # capacity respected, and recorded sizes match the graph
+        for p in parts:
+            assert p.param_bytes == g.segment_param_bytes(p.start, p.stop)
+            assert p.param_bytes <= cap, f"{name}: part over capacity"
+        # boundaries are exactly the cut edges' weights
+        assert r.boundaries == tuple(
+            g.edge_bytes(p.stop - 1) for p in parts[:-1]
+        )
+        assert r.max_cut_bytes == max(r.boundaries, default=0)
+
+    prop()
+
+
+@pytest.mark.parametrize("name", ALL_PARTITIONERS)
+def test_max_parts_budget_respected(name):
+    fn = get_strategy("partitioner", name).fn
+
+    @settings(max_examples=40, deadline=None)
+    @given(sizes=SIZES, cap=st.integers(10, 300), budget=st.integers(1, 6))
+    def prop(sizes, cap, budget):
+        g = _graph(sizes)
+        r = fn(g, cap, max_parts=budget)
+        if r.feasible:
+            assert r.n_parts <= budget, f"{name}: exceeded max_parts"
+
+    prop()
+
+
+@settings(max_examples=80, deadline=None)
+@given(sizes=SIZES, cap=st.integers(10, 300))
+def test_exact_k_min_max_never_worse_than_uniform(sizes, cap):
+    """The exact-k DP is optimal among k-part partitions, so at uniform's
+    own k it must meet or beat the equal-layer-count baseline's max cut."""
+    g = _graph(sizes)
+    uni = partition_uniform(g, cap)
+    if not uni.feasible:
+        return
+    opt = partition_exact_k(g, cap, uni.n_parts)
+    assert opt.feasible  # uniform exhibits a feasible k-part witness
+    assert opt.max_cut_bytes <= uni.max_cut_bytes
+
+
+@settings(max_examples=60, deadline=None)
+@given(sizes=SIZES, cap=st.integers(10, 300))
+def test_min_bottleneck_lower_bounds_every_strategy(sizes, cap):
+    """min_bottleneck is the exact min-max optimum over ALL part counts:
+    no registered strategy may report a smaller max cut."""
+    g = _graph(sizes)
+    best = partition_min_bottleneck(g, cap)
+    for name in ALL_PARTITIONERS:
+        r = get_strategy("partitioner", name).fn(g, cap)
+        if r.feasible:
+            assert best.feasible, f"{name} feasible but exact solver is not"
+            assert best.max_cut_bytes <= r.max_cut_bytes, name
+
+
+@settings(max_examples=40, deadline=None)
+@given(sizes=SIZES, cap=st.integers(10, 300))
+def test_infeasibility_agrees_on_oversized_layers(sizes, cap):
+    """A single layer over capacity defeats every contiguous partitioner."""
+    g = _graph(sizes)
+    if all(l.param_bytes <= cap for l in g.layers):
+        return
+    for name in ALL_PARTITIONERS:
+        assert not get_strategy("partitioner", name).fn(g, cap).feasible, name
