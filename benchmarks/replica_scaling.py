@@ -1,0 +1,147 @@
+"""Aggregate serving throughput vs pipeline replica count (Fig. 5 style).
+
+SEIFER's companion work frames the edge cluster as hosting *multiple*
+parallel inference pipelines; this benchmark measures what replication buys
+on a fixed 16-node symmetric cluster.  For each R the planner partitions the
+hosting nodes into R disjoint sub-clusters, plans one pipeline per group,
+and the cluster-wide router serves a request stream across them:
+
+  * aggregate measured throughput should scale ~linearly in R while every
+    group can still host the model (the depth-vs-width trade-off caps R);
+  * the measurement must pin to the planner's SUMMED per-replica prediction
+    (same ``service_times`` model) -- the run asserts within 5%;
+  * ``replicas="auto"`` must find the best R on its own.
+
+The run asserts the tentpole claim: at R=4 the aggregate is >= 3x the
+single-pipeline measurement.
+
+  PYTHONPATH=src python -m benchmarks.replica_scaling [--requests N]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import ClusterSpec, DeploymentSpec, deploy
+from repro.core.graph import Layer, LayerGraph
+from repro.core.placement import CommGraph
+
+from benchmarks.common import save, table
+
+ARTIFACT = "replica_scaling"  # results/BENCH_replica_scaling.json
+
+N_HOSTING = 16  # symmetric hosting nodes (+ node 0, the dispatcher)
+N_LAYERS = 16
+PARAM_BYTES = 1_000_000  # per layer
+ACT_BYTES = 200_000  # per boundary activation
+FLOPS = 20_000_000  # per layer: compute-bound stages, links cheap
+LINK_BYTES_S = 20e6  # uniform link bandwidth
+CAPACITY = 4.2e6  # 4 layers per node -> 4-stage pipelines
+R_VALUES = (1, 2, 4)
+
+
+def _graph() -> LayerGraph:
+    layers = tuple(
+        Layer(f"l{i}", param_bytes=PARAM_BYTES, out_bytes=ACT_BYTES, flops=FLOPS)
+        for i in range(N_LAYERS)
+    )
+    return LayerGraph("synth16", layers, in_bytes=ACT_BYTES // 2)
+
+
+def _comm(n_hosting: int = N_HOSTING) -> CommGraph:
+    bw = np.full((n_hosting + 1, n_hosting + 1), LINK_BYTES_S)
+    np.fill_diagonal(bw, 0.0)
+    cap = np.full(n_hosting + 1, CAPACITY)
+    cap[0] = -1.0  # dispatcher hosts no partition
+    return CommGraph(bw=bw, node_capacity=cap)
+
+
+def _measure(replicas, requests: int, seed: int) -> dict:
+    spec = DeploymentSpec(
+        model=_graph(),
+        cluster=ClusterSpec(comm=_comm()),
+        capacity=CAPACITY,
+        seed=seed,
+        microbatch=1,
+        replicas=replicas,
+    )
+    dep = deploy(spec)
+    n_rep = dep.replicaset.n_replicas if dep.replicated else 1
+    for _ in range(requests * n_rep):
+        dep.submit(jnp.ones((4,)))
+    dep.drain()
+    assert len(dep.loop.failed) == 0
+    assert len(dep.loop.completed) == requests * n_rep
+    measured = float(dep.loop.steady_state_throughput())
+    predicted = float(dep.plan.predicted_throughput)
+    return {
+        "replicas": str(replicas),
+        "pipelines": n_rep,
+        "predicted_sum": predicted,
+        "measured": measured,
+        "vs_predicted": measured / predicted if predicted > 0 else 0.0,
+    }
+
+
+def run(requests: int = 60, seed: int = 0, r_values=R_VALUES) -> dict:
+    rows = [_measure(r, requests, seed) for r in r_values]
+    rows.append(_measure("auto", requests, seed))
+    base = rows[0]["measured"] if rows[0]["pipelines"] == 1 else None
+    for row in rows:
+        row["speedup_vs_1"] = (
+            row["measured"] / base if base else 0.0
+        )
+    auto = rows[-1]
+    claims = {
+        "auto_pipelines": auto["pipelines"],
+        "auto_speedup_vs_1": auto["speedup_vs_1"],
+        "max_speedup_vs_1": max(r["speedup_vs_1"] for r in rows),
+        "worst_vs_predicted": min(r["vs_predicted"] for r in rows),
+        "best_vs_predicted": max(r["vs_predicted"] for r in rows),
+    }
+    payload = {
+        "rows": rows,
+        "claims": claims,
+        "cluster": {
+            "hosting_nodes": N_HOSTING,
+            "link_bytes_s": LINK_BYTES_S,
+            "capacity_bytes": CAPACITY,
+        },
+        "requests_per_replica": requests,
+        "serving": {"engine": "replicated router over pipelined engines"},
+    }
+    save(ARTIFACT, payload)
+    print(table(rows, ["replicas", "pipelines", "predicted_sum", "measured",
+                       "vs_predicted", "speedup_vs_1"],
+                "Aggregate serving throughput vs replica count (16 nodes)"))
+    print(f"claims: {claims}")
+    # measurement pins to the planner's summed prediction on every row
+    assert 0.95 <= claims["worst_vs_predicted"], claims
+    assert claims["best_vs_predicted"] <= 1.05, claims
+    four = [r for r in rows if r["pipelines"] == 4]
+    if base and four:
+        assert four[0]["speedup_vs_1"] >= 3.0, (
+            f"replicas=4 must be >= 3x the single pipeline, got "
+            f"{four[0]['speedup_vs_1']:.2f}x"
+        )
+    if base:
+        # auto must not leave throughput on the table
+        assert claims["auto_speedup_vs_1"] >= claims["max_speedup_vs_1"] - 1e-9
+    return payload
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=60,
+                    help="request stream size per replica")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(requests=args.requests, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -31,6 +31,7 @@ def main() -> int:
         fig3_bottleneck,
         joint_opt,
         kernel_bench,
+        replica_scaling,
         throughput_scaling,
     )
 
@@ -48,6 +49,9 @@ def main() -> int:
         "kernels": (kernel_bench, kernel_bench.run),
         "churn": (churn_throughput,
                   lambda: churn_throughput.run(per_phase=8 if args.fast else 40)),
+        "replicas": (replica_scaling,
+                     lambda: replica_scaling.run(
+                         requests=24 if args.fast else 60)),
     }
     failures = []
     for name, (module, fn) in benches.items():

@@ -45,6 +45,9 @@ _LAZY = {
     "SpecIssue": "repro.api.spec",
     "Plan": "repro.api.planner",
     "Planner": "repro.api.planner",
+    "ReplicatedPlan": "repro.api.planner",
+    "split_cluster": "repro.api.planner",
+    "subcluster": "repro.api.planner",
     "Deployment": "repro.api.deploy",
     "deploy": "repro.api.deploy",
 }

@@ -24,11 +24,16 @@ from typing import Any
 
 import numpy as np
 
-from repro.api.planner import Plan, Planner
-from repro.api.spec import DeploymentSpec
-from repro.cluster.controlplane import ControlPlane, ObservedState, ReconcileAction
-from repro.cluster.engine import PipelinedServingLoop
-from repro.cluster.events import ClusterEvent, NodeJoined
+from repro.api.planner import Plan, Planner, ReplicatedPlan
+from repro.api.spec import DeploymentSpec, InfeasibleSpecError, SpecIssue
+from repro.cluster.controlplane import (
+    ControlPlane,
+    ObservedState,
+    ReconcileAction,
+    ReplicaSet,
+)
+from repro.cluster.engine import PipelinedServingLoop, ReplicatedServingLoop
+from repro.cluster.events import ClusterEvent, NodeJoined, VersionBumped
 from repro.cluster.lifecycle import EdgeCluster
 from repro.cluster.serving import Request, ServingLoop
 from repro.cluster.store import ArtifactStore
@@ -59,20 +64,60 @@ def deploy(
         spec.executor_for_version or model_executor or
         (lambda v: _passthrough_executor)
     )
+    rplan = None
+    if spec.replicas != 1:
+        # split the cluster BEFORE any probing: groups are decided on the
+        # true bandwidths, each replica then bootstraps within its group
+        rplan = Planner.from_spec(spec).plan_replicated(
+            graph, comm,
+            replicas=spec.replicas, capacity=spec.capacity, version=version,
+            dispatcher=0, device_flops=flops_per_s,
+            compression_ratio=spec.compression_ratio,
+        )
+        if not rplan.feasible:
+            raise InfeasibleSpecError((SpecIssue(
+                "infeasible_replicas",
+                f"could not plan {spec.replicas!r} replica pipeline(s) on "
+                f"this cluster (hosting nodes per group too few, or a group "
+                f"cannot host the model)",
+            ),))
+        if rplan.n_replicas == 1:
+            rplan = None  # replicas="auto" chose a single pipeline
     cluster = EdgeCluster(comm, flops_per_s=flops_per_s)
     store = ArtifactStore(
         store_root if store_root is not None
         else tempfile.mkdtemp(prefix="seifer-deploy-")
     )
-    control = ControlPlane(
-        cluster, store,
-        lambda v: graph, executor_for_version,
-        planner=Planner.from_spec(spec),
-        capacity=spec.capacity, compression_ratio=spec.compression_ratio,
-        seed=spec.seed,
-    )
-    control.bootstrap(version)
-    dep = Deployment(spec, control, positions=positions)
+    if rplan is None:
+        control = ControlPlane(
+            cluster, store,
+            lambda v: graph, executor_for_version,
+            planner=Planner.from_spec(spec),
+            capacity=spec.capacity, compression_ratio=spec.compression_ratio,
+            seed=spec.seed,
+        )
+        control.bootstrap(version)
+        dep = Deployment(spec, control, positions=positions)
+    else:
+        controls = []
+        for r, group in enumerate(rplan.groups):
+            control = ControlPlane(
+                cluster, store,
+                lambda v: graph, executor_for_version,
+                planner=Planner.from_spec(spec),
+                capacity=spec.capacity,
+                compression_ratio=spec.compression_ratio,
+                seed=spec.seed + 7919 * r,  # distinct probe-noise streams
+                allowed_nodes=set(group) | {0},
+                hosting_nodes=set(group),
+            )
+            control.bootstrap(version)
+            controls.append(control)
+        replicaset = ReplicaSet(
+            cluster, controls, [set(g) for g in rplan.groups],
+            dispatcher_node=0,
+        )
+        dep = Deployment(spec, replicaset=replicaset, positions=positions)
     dep._check_slos()
     return dep
 
@@ -87,26 +132,46 @@ class Deployment:
     def __init__(
         self,
         spec: DeploymentSpec,
-        control: ControlPlane,
+        control: ControlPlane | None = None,
         *,
+        replicaset: ReplicaSet | None = None,
         positions: np.ndarray | None = None,
     ):
+        if (control is None) == (replicaset is None):
+            raise ValueError("give exactly one of control= or replicaset=")
         self.spec = spec
-        self.control = control
-        if spec.serving == "sync":
-            self.loop = ServingLoop(control, microbatch=spec.microbatch)
-        else:
-            self.loop = PipelinedServingLoop(
-                control, microbatch=spec.microbatch,
+        self.replicaset = replicaset
+        if replicaset is not None:
+            # replica 0 as the representative for shared resources
+            # (cluster/store are one object across every replica)
+            self.control = replicaset.controls[0]
+            self.loop = ReplicatedServingLoop(
+                replicaset, microbatch=spec.microbatch,
                 queue_depth=spec.queue_depth,
             )
-        self.watcher = ModelWatcher(control.store)
+        else:
+            self.control = control
+            if spec.serving == "sync":
+                self.loop = ServingLoop(control, microbatch=spec.microbatch)
+            else:
+                self.loop = PipelinedServingLoop(
+                    control, microbatch=spec.microbatch,
+                    queue_depth=spec.queue_depth,
+                )
+        self.watcher = ModelWatcher(self.control.store)
         self.positions = positions  # node positions for random clusters (growth)
 
     # -- introspection -------------------------------------------------------
     @property
-    def plan(self) -> Plan:
-        """The most recent feasible plan the control plane deployed."""
+    def replicated(self) -> bool:
+        return self.replicaset is not None
+
+    @property
+    def plan(self) -> Plan | ReplicatedPlan:
+        """What is deployed: the control plane's plan, or (replicated) the
+        aggregate of the live replicas' plans (summed throughput)."""
+        if self.replicaset is not None:
+            return self.replicaset.deployed_plan()
         return self.control.last_plan
 
     @property
@@ -117,8 +182,22 @@ class Deployment:
     def store(self) -> ArtifactStore:
         return self.control.store
 
+    @property
+    def pending(self) -> int:
+        """Cluster events not yet reconciled (rollouts included)."""
+        if self.replicaset is not None:
+            return self.replicaset.pending
+        return self.control.pending
+
     def observed(self) -> ObservedState:
+        """Single-pipeline observation; replicated deployments report per
+        replica (``observed_replicas``), so this returns replica 0's view."""
         return self.control.observed()
+
+    def observed_replicas(self) -> tuple[ObservedState, ...]:
+        if self.replicaset is None:
+            return (self.control.observed(),)
+        return self.replicaset.observed()
 
     # -- serving -------------------------------------------------------------
     def submit(self, x: Any) -> Request:
@@ -135,16 +214,37 @@ class Deployment:
 
     # -- churn + convergence -------------------------------------------------
     def inject(self, event: ClusterEvent) -> None:
-        """Enqueue a cluster disturbance; ``reconcile()`` converges on it."""
-        self.control.submit(event)
+        """Enqueue a cluster disturbance; ``reconcile()`` converges on it.
+
+        Replicated deployments route the event to the replica(s) it touches
+        (``ReplicaSet.submit``); the others never see it.
+        """
+        (self.replicaset or self.control).submit(event)
 
     def reconcile(self) -> list[ReconcileAction]:
         """Drain the event queue and converge observed -> desired state."""
-        return self.control.reconcile()
+        return (self.replicaset or self.control).reconcile()
 
     def poll_model_updates(self) -> bool:
-        """Watch tick: emit ``VersionBumped`` if the store moved past us."""
-        return self.watcher.poll_events(self.control)
+        """Watch tick: emit ``VersionBumped`` if the store moved past us.
+
+        Replicated deployments start a rolling bump (one replica at a time)
+        when any live replica is behind the store pointer and that version
+        is not already rolling.
+        """
+        if self.replicaset is None:
+            return self.watcher.poll_events(self.control)
+        rset = self.replicaset
+        latest = self.store.current_version()
+        behind = any(
+            rset.controls[r].desired is not None
+            and rset.controls[r].desired.version < latest
+            for r in rset.live_indices()
+        )
+        if not behind or rset.rolling_version() >= latest:
+            return False
+        rset.submit(VersionBumped(latest))
+        return True
 
     def grow_cluster(self, seed: int = 0) -> NodeJoined:
         """Convenience churn: add one random node (full-restart event).
@@ -182,6 +282,9 @@ class Deployment:
         back to the two-step pipeline (a joint strategy *replaces* that
         pipeline, so keeping it would make the swap a silent no-op).  The
         running pipeline is only replaced if the new plan is feasible.
+
+        On a replicated deployment the swap applies to every live replica
+        (each keeps its own sub-cluster); the aggregate plan is returned.
         """
         current = self.control.planner
         if joint is not None:
@@ -197,11 +300,21 @@ class Deployment:
             n_classes=current.n_classes,
             seed=current.seed,
         )
-        return self.control.replan(planner)
+        if self.replicaset is None:
+            return self.control.replan(planner)
+        for r in self.replicaset.live_indices():
+            self.replicaset.controls[r].replan(planner)
+        return self.replicaset.deployed_plan()
 
     # -- metrics -------------------------------------------------------------
     def metrics(self) -> dict:
-        """Predicted vs. observed placement quality + serving counters."""
+        """Predicted vs. observed placement quality + serving counters.
+
+        Replicated deployments report the aggregate (summed predicted
+        throughput, live/retired counts) plus one entry per replica.
+        """
+        if self.replicaset is not None:
+            return self._replicated_metrics()
         obs = self.observed()
         plan = self.plan
         out = {
@@ -220,10 +333,42 @@ class Deployment:
         }
         return out
 
+    def _replicated_metrics(self) -> dict:
+        rset = self.replicaset
+        plan = rset.deployed_plan()
+        replicas = []
+        for r, control in enumerate(rset.controls):
+            obs = control.observed()
+            replicas.append({
+                "replica": r,
+                "retired": rset.retired[r],
+                "group": sorted(rset.groups[r]),
+                "version": obs.version,
+                "generation": obs.generation,
+                "leader": obs.leader,
+                "path": list(obs.path),
+                "healthy": obs.healthy,
+                "bottleneck_latency_s": obs.bottleneck_latency,
+                "predicted_throughput": (
+                    control.last_plan.predicted_throughput
+                    if control.last_plan else None
+                ),
+                "reconcile_actions": [a.kind for a in control.history],
+            })
+        return {
+            "version": plan.version,
+            "n_nodes": self.cluster.n,
+            "n_replicas": rset.n_replicas,
+            "live_replicas": len(rset.live_indices()),
+            "strategies": dict(plan.strategies) if plan.replicas else {},
+            "predicted_bottleneck_s": plan.predicted_bottleneck_s,
+            "predicted_throughput": plan.predicted_throughput,
+            "replicas": replicas,
+            "serving": self.loop.metrics(),
+        }
+
     def _check_slos(self) -> None:
         """SLOs re-checked on the as-deployed plan (probed bandwidths)."""
-        from repro.api.spec import InfeasibleSpecError
-
         issues = self.plan.slo_issues(self.spec)
         if issues:
             raise InfeasibleSpecError(issues)

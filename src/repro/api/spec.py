@@ -150,6 +150,13 @@ class DeploymentSpec:
         per round, throughput = 1 / end-to-end time).
     queue_depth:
         pipelined mode only: bound on each stage's in-queue (backpressure).
+    replicas:
+        pipeline replica count.  ``1`` (default) plans one pipeline over the
+        whole cluster; an int R partitions the hosting nodes into R disjoint
+        sub-clusters and serves one data-parallel pipeline per sub-cluster
+        behind a cluster-wide router; ``"auto"`` picks the R maximizing the
+        summed predicted throughput.  Replicated serving always uses the
+        pipelined engine.
     """
 
     model: Any
@@ -167,6 +174,7 @@ class DeploymentSpec:
     microbatch: int = 4
     serving: str = "pipelined"
     queue_depth: int = 2
+    replicas: int | str = 1
 
     def __post_init__(self) -> None:
         if isinstance(self.cluster, CommGraph):
@@ -247,6 +255,23 @@ class DeploymentSpec:
         if self.queue_depth < 1:
             issues.append(SpecIssue("bad_serving", "queue_depth must be >= 1"))
 
+        if not (
+            self.replicas == "auto"
+            or (isinstance(self.replicas, int)
+                and not isinstance(self.replicas, bool)
+                and self.replicas >= 1)
+        ):
+            issues.append(SpecIssue(
+                "bad_replicas",
+                f"replicas must be an int >= 1 or 'auto', got {self.replicas!r}",
+            ))
+        elif self.replicas != 1 and self.serving == "sync":
+            issues.append(SpecIssue(
+                "bad_replicas",
+                "replica sets serve through the pipelined engine; "
+                "serving='sync' supports only replicas=1",
+            ))
+
         # capacity feasibility: report WHY, naming the offending layer
         if graph is not None and cluster_ok:
             comm, _ = self.cluster.build()
@@ -269,6 +294,18 @@ class DeploymentSpec:
                     f"hosting nodes hold {hostable:.0f} B total -- add nodes or "
                     f"raise per-node capacity",
                 ))
+            if isinstance(self.replicas, int) and self.replicas > 1:
+                hosting = sum(
+                    1 for i, c in enumerate(comm.node_capacity)
+                    if c > 0 and i != 0
+                )
+                if self.replicas > hosting:
+                    issues.append(SpecIssue(
+                        "infeasible_replicas",
+                        f"replicas={self.replicas} exceeds the {hosting} "
+                        f"hosting node(s) (node 0 is the shared dispatcher) "
+                        f"-- the cluster cannot be split that wide",
+                    ))
 
         return tuple(issues)
 

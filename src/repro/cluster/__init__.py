@@ -3,6 +3,7 @@ from repro.cluster.controlplane import (
     DesiredState,
     ObservedState,
     ReconcileAction,
+    ReplicaSet,
 )
 from repro.cluster.dispatcher import DeploymentPlan, Dispatcher
 from repro.cluster.events import (
@@ -12,7 +13,12 @@ from repro.cluster.events import (
     NodeJoined,
     VersionBumped,
 )
-from repro.cluster.engine import Microbatch, PipelinedServingLoop, StageState
+from repro.cluster.engine import (
+    Microbatch,
+    PipelinedServingLoop,
+    ReplicatedServingLoop,
+    StageState,
+)
 from repro.cluster.lifecycle import EdgeCluster, InferencePipeline, Node, Pod
 from repro.cluster.serving import Request, ServingLoop
 from repro.cluster.store import ArtifactStore
@@ -37,6 +43,8 @@ __all__ = [
     "PipelinedServingLoop",
     "Pod",
     "ReconcileAction",
+    "ReplicaSet",
+    "ReplicatedServingLoop",
     "Request",
     "ServingLoop",
     "StageState",

@@ -49,9 +49,17 @@ class Dispatcher:
         n_classes: int | None = UNSET,
         probe_noise: float = 0.05,
         seed: int = 0,
+        allowed_nodes: set[int] | None = None,
+        hosting_nodes: set[int] | None = None,
     ):
         self.cluster = cluster
         self.store = store
+        # replica-set masking: ``allowed_nodes`` bounds what this dispatcher
+        # can see at all (its group + the shared dispatcher node); within
+        # that, only ``hosting_nodes`` may host partitions.  ``None`` (the
+        # default, single-pipeline mode) sees the whole cluster.
+        self.allowed_nodes = allowed_nodes
+        self.hosting_nodes = hosting_nodes
         if planner is not None:
             if n_classes is not UNSET:
                 raise ValueError(
@@ -80,8 +88,16 @@ class Dispatcher:
         self.leader = None
         self.probed = None
 
-    def elect_leader(self) -> int:
+    def visible_healthy_ids(self) -> list[int]:
+        """Healthy nodes this dispatcher may see (its replica group, or the
+        whole cluster in single-pipeline mode)."""
         healthy = self.cluster.healthy_ids()
+        if self.allowed_nodes is None:
+            return healthy
+        return [i for i in healthy if i in self.allowed_nodes]
+
+    def elect_leader(self) -> int:
+        healthy = self.visible_healthy_ids()
         if not healthy:
             raise RuntimeError("no healthy nodes")
         self.leader = min(healthy)
@@ -94,7 +110,18 @@ class Dispatcher:
         noise = self.rng.lognormal(0.0, self.probe_noise, size=(n, n))
         noise = np.tril(noise) + np.tril(noise, -1).T  # symmetric
         bw = true.bw * noise
-        self.probed = CommGraph(bw=bw, node_capacity=true.node_capacity)
+        cap = true.node_capacity
+        if self.allowed_nodes is not None:
+            bw = bw.copy()
+            cap = cap.copy()
+            for i in range(n):
+                if i not in self.allowed_nodes:
+                    bw[i, :] = 0.0
+                    bw[:, i] = 0.0
+                    cap[i] = 0.0
+                elif self.hosting_nodes is not None and i not in self.hosting_nodes:
+                    cap[i] = min(cap[i], 0.0)
+        self.probed = CommGraph(bw=bw, node_capacity=cap)
         return self.probed
 
     # -- Sec 2.2: configuration step -----------------------------------------
@@ -115,7 +142,7 @@ class Dispatcher:
             graph, comm,
             capacity=cap,
             version=version,
-            max_parts=len(self.cluster.healthy_ids()),
+            max_parts=len(self.visible_healthy_ids()),
             seed=int(self.rng.integers(1 << 31)),
             include_dispatcher=include_dispatcher,
             dispatcher=self.leader if include_dispatcher else None,

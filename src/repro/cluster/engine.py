@@ -45,7 +45,7 @@ from typing import Any
 
 import jax.numpy as jnp
 
-from repro.cluster.controlplane import ControlPlane, ReconcileAction
+from repro.cluster.controlplane import ControlPlane, ReconcileAction, ReplicaSet
 from repro.cluster.events import NodeFailed
 from repro.cluster.lifecycle import Pod
 from repro.cluster.serving import Request
@@ -137,6 +137,12 @@ class PipelinedServingLoop:
     def submit(self, x: Any) -> Request:
         req = Request(self._next_id, x, submitted_s=self.clock_s)
         self._next_id += 1
+        self.queue.append(req)
+        return req
+
+    def admit(self, req: Request) -> Request:
+        """Admit an already-created request (the replica router's path: ids
+        are minted cluster-wide, so the per-replica loop must not renumber)."""
         self.queue.append(req)
         return req
 
@@ -348,6 +354,32 @@ class PipelinedServingLoop:
         for mb in sorted(requeue + readmit, key=lambda m: -m.mb_id):
             self._readmit(mb.requests, retry=id(mb) in retried)
 
+    def evacuate(self) -> list[tuple[Request, bool]]:
+        """Strip every undelivered request out of the engine (the router's
+        replica-retirement path) and reset the stage/link state.
+
+        Returns ``(request, charged)`` pairs in admission order, applying
+        the same classification ``_rebind`` uses on recovery: a request
+        resident on a stage or a non-input link is charged (its work was
+        lost), an input-hop rider or a still-queued request is free (the
+        dispatcher still holds the input)."""
+        out: list[tuple[Request, bool]] = []
+        for mb in sorted(self._inflight, key=lambda m: m.mb_id):
+            charged = mb.location != ("link", 0)
+            if charged:
+                self._requeues += 1
+            out.extend((req, charged) for req in mb.requests)
+        out.extend((req, False) for req in self.queue)
+        self._inflight.clear()
+        self.queue.clear()
+        self._links_busy = [None] * len(self._links_busy)
+        for st in self._stages:
+            st.queue.clear()
+            st.out.clear()
+            st.current = None
+            st.reserved = 0
+        return out
+
     # -- discrete-event core ---------------------------------------------------
     def _advance(self) -> bool:
         """Pop the earliest event batch off the virtual clock; False if idle."""
@@ -485,3 +517,216 @@ class PipelinedServingLoop:
             req.result = mb.x[i]
             req.completed_s = self.clock_s
             self.completed.append(req)
+
+
+class ReplicatedServingLoop:
+    """Cluster-wide request router over R per-replica pipelined engines.
+
+    Each replica runs its own ``PipelinedServingLoop`` (its own stages,
+    links, and virtual clock); the router co-simulates them on one shared
+    timeline by always advancing the *lagging* replica (the discrete-event
+    rule: process the earliest pending event first).  Admission policy:
+
+      * **shortest expected wait** -- a request goes to the replica whose
+        ``clock + backlog x predicted microbatch period`` is smallest (the
+        period comes from the replica's as-deployed plan, so routing adapts
+        when a replica is re-placed onto slower links);
+      * **bounded per-replica backlog** -- a replica holds at most
+        ``replica_backlog`` undelivered requests; when every live replica is
+        full, requests wait in the cluster-wide queue (backpressure composes
+        with the per-stage ``queue_depth`` bounds inside each engine);
+      * **retirement** -- when a replica's group can no longer host the
+        model (its control plane's recovery raises), the replica is retired:
+        its resident requests are reclaimed into the cluster-wide queue
+        (stage residents charged an attempt, input-hop riders and
+        still-queued requests free) and re-routed to the survivors.
+
+    Same surface as ``PipelinedServingLoop`` (``submit`` / ``step`` /
+    ``drain`` / ``metrics`` / ``backlog`` / ``steady_state_throughput``), so
+    ``Deployment`` and the benchmarks treat R pipelines as one.
+    """
+
+    def __init__(
+        self,
+        replicaset: ReplicaSet,
+        *,
+        microbatch: int = 4,
+        queue_depth: int = 2,
+        max_attempts: int = 5,
+        recovery_penalty_s: float = 0.25,
+        replica_backlog: int = 32,
+    ):
+        if replica_backlog < 1:
+            raise ValueError("replica_backlog must be >= 1")
+        self.replicaset = replicaset
+        self.loops = [
+            PipelinedServingLoop(
+                control, microbatch=microbatch, queue_depth=queue_depth,
+                max_attempts=max_attempts,
+                recovery_penalty_s=recovery_penalty_s,
+            )
+            for control in replicaset.controls
+        ]
+        self.microbatch = int(microbatch)
+        self.max_attempts = int(max_attempts)
+        self.replica_backlog = int(replica_backlog)
+        self.queue: deque[Request] = deque()  # cluster-wide admission
+        self.completed: list[Request] = []
+        self._router_failed: list[Request] = []
+        self._next_id = 0
+        self.dispatched = [0] * len(self.loops)
+        self._reclaimed = [False] * len(self.loops)
+
+    # -- aggregate views -------------------------------------------------------
+    @property
+    def clock_s(self) -> float:
+        return max((loop.clock_s for loop in self.loops), default=0.0)
+
+    @property
+    def failed(self) -> list[Request]:
+        return self._router_failed + [
+            req for loop in self.loops for req in loop.failed
+        ]
+
+    @property
+    def backlog(self) -> int:
+        """Undelivered requests anywhere: router queue + every replica."""
+        return len(self.queue) + sum(loop.backlog for loop in self.loops)
+
+    @property
+    def pending(self) -> int:
+        return self.replicaset.pending
+
+    # -- admission -------------------------------------------------------------
+    def submit(self, x: Any) -> Request:
+        req = Request(self._next_id, x, submitted_s=self.clock_s)
+        self._next_id += 1
+        self.queue.append(req)
+        return req
+
+    # -- one serving round -----------------------------------------------------
+    def step(self) -> list[Request]:
+        """Advance the lagging replica until some replica completes a
+        request (or the whole set is idle)."""
+        done0 = len(self.completed)
+        rset = self.replicaset
+        for r in range(len(self.loops)):
+            if rset.retired[r] and not self._reclaimed[r]:
+                self._reclaim(r)  # retired out of band (direct reconcile())
+        rset.advance_rollout()
+        self._dispatch()
+        guard = 0
+        while len(self.completed) == done0:
+            guard += 1
+            if guard > 1_000_000:
+                raise RuntimeError("replica router made no progress")
+            live = rset.live_indices()
+            if not live:
+                # every replica retired: nothing left can ever serve
+                while self.queue:
+                    self._router_failed.append(self.queue.popleft())
+                break
+            active = [
+                r for r in live
+                if self.loops[r].backlog or self.loops[r].control.pending
+            ]
+            if not active:
+                break  # idle (the dispatch above drained the router queue)
+            r = min(active, key=lambda i: (self.loops[i].clock_s, i))
+            try:
+                self.completed.extend(self.loops[r].step())
+            except RuntimeError as e:
+                rset.mark_retired(r, str(e))
+                self._reclaim(r)
+            rset.advance_rollout()
+            self._dispatch()
+        return self.completed[done0:]
+
+    def drain(self, max_rounds: int = 100_000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_rounds):
+            if not self.backlog and not self.pending:
+                break
+            done.extend(self.step())
+        return done
+
+    # -- routing ---------------------------------------------------------------
+    def _expected_ready_s(self, r: int) -> float:
+        """Shortest-expected-wait estimate: the replica's clock plus its
+        backlog served at the planner-predicted microbatch period."""
+        loop = self.loops[r]
+        plan = self.replicaset.controls[r].last_plan
+        rate = plan.predicted_throughput if plan is not None else 0.0
+        period = 1.0 / rate if rate > 0 and rate != float("inf") else 0.0
+        batches = loop.backlog // max(1, loop.microbatch) + 1
+        return loop.clock_s + batches * period
+
+    def _dispatch(self) -> None:
+        """Route router-queue requests to replicas; stop at backpressure."""
+        while self.queue:
+            best = None
+            for r in self.replicaset.live_indices():
+                if self.loops[r].backlog >= self.replica_backlog:
+                    continue
+                key = (self._expected_ready_s(r), self.loops[r].backlog, r)
+                if best is None or key < best[0]:
+                    best = (key, r)
+            if best is None:
+                return  # every live replica is full (or none is live)
+            r = best[1]
+            req = self.queue.popleft()
+            req.replica = r
+            self.loops[r].admit(req)
+            self.dispatched[r] += 1
+
+    def _reclaim(self, r: int) -> None:
+        """Pull every request out of a retired replica and re-route it.
+
+        The engine owns the requeue semantics (``evacuate``): requests
+        resident on the replica's stages/links come back charged an attempt
+        (their work was lost), input-hop riders and still-queued requests
+        free."""
+        self._reclaimed[r] = True
+        # front of the router queue, original relative order preserved
+        for req, charged in reversed(self.loops[r].evacuate()):
+            if charged:
+                req.attempts += 1
+                if req.attempts >= self.max_attempts:
+                    self._router_failed.append(req)
+                    continue
+            self.queue.appendleft(req)
+
+    # -- metrics ---------------------------------------------------------------
+    def metrics(self) -> dict:
+        done = len(self.completed)
+        t = self.clock_s
+        live = set(self.replicaset.live_indices())
+        return {
+            "mode": "replicated",
+            "completed": done,
+            "failed": len(self.failed),
+            "backlog": self.backlog,
+            "clock_s": t,
+            "throughput": done / t if t > 0 else 0.0,
+            "retries": sum(r.attempts for r in self.completed),
+            "n_replicas": len(self.loops),
+            "live_replicas": len(live),
+            "router": {
+                "policy": "shortest_expected_wait",
+                "replica_backlog": self.replica_backlog,
+                "queued": len(self.queue),
+                "dispatched": list(self.dispatched),
+            },
+            "replicas": [
+                {"replica": r, "retired": r not in live, **loop.metrics()}
+                for r, loop in enumerate(self.loops)
+            ],
+        }
+
+    def steady_state_throughput(self, skip_frac: float = 0.5) -> float:
+        """Aggregate requests/s: the sum of the live replicas' steady-state
+        rates (each measured on its own completion tail)."""
+        return float(sum(
+            self.loops[r].steady_state_throughput(skip_frac)
+            for r in self.replicaset.live_indices()
+        ))

@@ -41,7 +41,12 @@ from repro.cluster.controlplane import ControlPlane, ReconcileAction
 
 @dataclasses.dataclass
 class Request:
-    """One admitted inference request (a single sample)."""
+    """One admitted inference request (a single sample).
+
+    ``replica`` is stamped by the cluster-wide router when the request is
+    dispatched to a pipeline replica (re-stamped if it is re-routed after a
+    replica retires); ``None`` under single-pipeline serving.
+    """
 
     req_id: int
     x: Any
@@ -49,6 +54,7 @@ class Request:
     attempts: int = 0
     completed_s: float | None = None
     result: Any = None
+    replica: int | None = None
 
     @property
     def done(self) -> bool:
@@ -78,6 +84,11 @@ class ServingLoop:
     def submit(self, x: Any) -> Request:
         req = Request(self._next_id, x, submitted_s=self.clock_s)
         self._next_id += 1
+        self.queue.append(req)
+        return req
+
+    def admit(self, req: Request) -> Request:
+        """Admit an already-created request (ids minted by the caller)."""
         self.queue.append(req)
         return req
 

@@ -40,6 +40,7 @@ def serve_edge(
     width: int = 32,
     serving: str = "pipelined",
     queue_depth: int = 2,
+    replicas: int | str = 1,
 ) -> int:
     """Edge-cluster serving demo: deploy(spec) -> stream -> kill -> recover."""
     graph, executor_for_version = demo_mlp(d=width)
@@ -56,18 +57,25 @@ def serve_edge(
         microbatch=4,
         serving=serving,
         queue_depth=queue_depth,
+        replicas=replicas,
     )
     d = deploy(spec)
-    obs = d.observed()
     names = dict(d.plan.strategies)
-    print(f"edge serving [{names}, {serving}]: {len(obs.path)} partitions on "
-          f"nodes {list(obs.path)}, bottleneck {obs.bottleneck_latency*1e3:.3f} ms, "
-          f"predicted {d.plan.predicted_throughput:.1f} microbatch/s")
+    if d.replicated:
+        sets = d.replicaset
+        print(f"edge serving [{names}, {serving}, x{sets.n_replicas} replicas]: "
+              f"groups {[sorted(g) for g in sets.groups]}, summed predicted "
+              f"{d.plan.predicted_throughput:.1f} microbatch/s")
+    else:
+        obs = d.observed()
+        print(f"edge serving [{names}, {serving}]: {len(obs.path)} partitions on "
+              f"nodes {list(obs.path)}, bottleneck {obs.bottleneck_latency*1e3:.3f} ms, "
+              f"predicted {d.plan.predicted_throughput:.1f} microbatch/s")
     for _ in range(requests):
         d.submit(jnp.ones((width,)) * 0.1)
     half = requests // 2
     killed = half == 0  # nothing to kill mid-stream on a tiny run
-    while d.loop.backlog or d.control.pending:
+    while d.loop.backlog or d.pending:
         if not killed and len(d.loop.completed) >= half:
             pods = d.control.pipeline.pods
             victim = pods[1 if len(pods) > 1 else 0].node_id
@@ -76,13 +84,23 @@ def serve_edge(
             killed = True
         d.step()
     m = d.metrics()
-    print(f"served {m['serving']['completed']}/{requests} requests "
-          f"(lost {m['serving']['failed']}) in {m['serving']['clock_s']:.3f} "
-          f"simulated s; final path {m['path']}, actions: {m['reconcile_actions']}")
-    for st in m["serving"].get("stages", ()):
-        print(f"  stage {st['stage']} on node {st['node']}: "
-              f"occupancy {st['occupancy']:.2f}, mean queue {st['mean_queue']:.2f}, "
-              f"max queue {st['max_queue']}, {st['microbatches']} microbatches")
+    if d.replicated:
+        s = m["serving"]
+        print(f"served {s['completed']}/{requests} requests (lost {s['failed']}) "
+              f"in {s['clock_s']:.3f} simulated s across "
+              f"{m['live_replicas']}/{m['n_replicas']} live replicas; "
+              f"router dispatched {s['router']['dispatched']}")
+        for rep in m["replicas"]:
+            print(f"  replica {rep['replica']}{' (retired)' if rep['retired'] else ''}: "
+                  f"path {rep['path']}, actions {rep['reconcile_actions']}")
+    else:
+        print(f"served {m['serving']['completed']}/{requests} requests "
+              f"(lost {m['serving']['failed']}) in {m['serving']['clock_s']:.3f} "
+              f"simulated s; final path {m['path']}, actions: {m['reconcile_actions']}")
+        for st in m["serving"].get("stages", ()):
+            print(f"  stage {st['stage']} on node {st['node']}: "
+                  f"occupancy {st['occupancy']:.2f}, mean queue {st['mean_queue']:.2f}, "
+                  f"max queue {st['max_queue']}, {st['microbatches']} microbatches")
     return 0
 
 
@@ -116,15 +134,20 @@ def main() -> int:
                          "vs synchronous baseline)")
     ap.add_argument("--queue-depth", type=int, default=2,
                     help="edge mode per-stage in-queue bound (pipelined only)")
+    ap.add_argument("--replicas", default="1",
+                    help="edge mode pipeline replica count: an int, or 'auto' "
+                         "to maximize summed predicted throughput")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.edge:
+        replicas = args.replicas if args.replicas == "auto" else int(args.replicas)
         return serve_edge(
             args.requests, args.nodes, args.seed,
             partitioner=args.partitioner, placer=args.placer, joint=args.joint,
             capacity_frac=args.capacity_frac, width=args.width,
             serving=args.serving, queue_depth=args.queue_depth,
+            replicas=replicas,
         )
     if not args.arch:
         ap.error("--arch is required unless --edge is given")

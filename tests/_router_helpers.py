@@ -1,0 +1,23 @@
+"""Shared assertions for replicated-serving tests.
+
+The replica router's conservation invariant -- every admitted request lives
+in exactly one of {completed, failed, router queue, a replica's admission
+queue, an in-flight microbatch} -- is asserted by both the router property
+suite and the replica chaos scenarios; one walker keeps the two in lockstep
+when the router grows a new holding location.
+"""
+
+
+def assert_router_conserved(dep, submitted_ids):
+    """Walk every place a request can live in a replicated deployment."""
+    loop = dep.loop
+    everywhere = (
+        [r.req_id for r in loop.completed]
+        + [r.req_id for r in loop.failed]
+        + [r.req_id for r in loop.queue]
+        + [r.req_id for sub in loop.loops for r in sub.queue]
+        + [r.req_id for sub in loop.loops for mb in sub._inflight
+           for r in mb.requests]
+    )
+    assert len(everywhere) == len(set(everywhere)), "request duplicated"
+    assert sorted(everywhere) == sorted(submitted_ids), "request lost"

@@ -64,6 +64,25 @@ def test_churn_benchmark_emits_a_valid_canonical_artifact(tmp_path, monkeypatch)
     assert payload["lost_requests"] == 0
 
 
+def test_replica_scaling_benchmark_emits_a_valid_canonical_artifact(
+        tmp_path, monkeypatch):
+    """End to end: the replica-scaling benchmark writes one schema-valid
+    BENCH_ artifact whose rows pin measurement to the summed prediction."""
+    from benchmarks import replica_scaling
+
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path)
+    replica_scaling.run(requests=16, r_values=(1, 2))
+    (path,) = tmp_path.iterdir()
+    assert path.name == f"{ARTIFACT_PREFIX}replica_scaling.json"
+    payload = json.loads(path.read_text())
+    validate_payload(path.stem, payload)
+    assert {r["pipelines"] for r in payload["rows"]} >= {1, 2}
+    assert 0.95 <= payload["claims"]["worst_vs_predicted"]
+    assert payload["claims"]["best_vs_predicted"] <= 1.05
+    router = payload["serving"]["engine"]
+    assert "replicated" in router
+
+
 def test_every_benchmark_declares_its_artifact_name():
     """run.py (and the CI upload step) resolve artifact paths through each
     module's ARTIFACT constant -- the single source of the basename."""
@@ -71,7 +90,7 @@ def test_every_benchmark_declares_its_artifact_name():
 
     for mod in ("algo_scaling", "approx_ratio", "churn_throughput",
                 "fig3_bottleneck", "joint_opt", "kernel_bench",
-                "throughput_scaling"):
+                "replica_scaling", "throughput_scaling"):
         m = importlib.import_module(f"benchmarks.{mod}")
         assert isinstance(m.ARTIFACT, str) and m.ARTIFACT, mod
 

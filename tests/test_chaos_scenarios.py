@@ -24,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _router_helpers import assert_router_conserved
+
 from repro.api import ClusterSpec, DeploymentSpec, deploy
 from repro.cluster import LinkDegraded, NodeFailed, NodeJoined
 from repro.core.model_zoo import demo_mlp
@@ -149,6 +151,176 @@ def test_chaos_converges_and_loses_nothing(seed):
         jax.random.normal(jax.random.PRNGKey(obs.version), (8, D, D)) * 0.3
     )
     ref = x
+    for w in ws:
+        ref = jnp.tanh(ref @ w)
+    np.testing.assert_allclose(np.asarray(req.result), np.asarray(ref), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Replica isolation: churn in one replica must not touch the others
+# ---------------------------------------------------------------------------
+
+R_REPLICAS = 3
+
+
+def _replicated_deployment(seed, *, group_size=4, replicas=R_REPLICAS,
+                           microbatch=2):
+    """R pipeline replicas on a symmetric cluster.
+
+    ``capacity = 0.4 x model`` packs demo_mlp's 8 layers into 3-part
+    pipelines, so a ``group_size=4`` replica keeps one spare node (in-group
+    re-place possible) while ``group_size=3`` has none (a kill retires it).
+    """
+    graph, executor_for_version = demo_mlp(d=D)
+    capacity = graph.total_param_bytes * 0.4
+    n_hosting = replicas * group_size
+    bw = np.full((n_hosting + 1, n_hosting + 1), 4e5)
+    np.fill_diagonal(bw, 0.0)
+    caps = np.full(n_hosting + 1, capacity)
+    caps[0] = -1.0  # dispatcher hosts no partition
+    from repro.core.placement import CommGraph
+
+    spec = DeploymentSpec(
+        model=graph,
+        executor_for_version=executor_for_version,
+        cluster=ClusterSpec(comm=CommGraph(bw=bw, node_capacity=caps)),
+        capacity=capacity,
+        seed=seed,
+        microbatch=microbatch,
+        replicas=replicas,
+    )
+    return deploy(spec)
+
+
+def _window_rate(reqs, lo, hi):
+    """Completions/s inside (lo, hi], from the MEDIAN positive
+    inter-completion gap -- the steady cadence, robust to microbatch
+    same-timestamp pairs and to idle gaps while the stream drains."""
+    ts = sorted(r.completed_s for r in reqs if lo < r.completed_s <= hi)
+    gaps = [b - a for a, b in zip(ts, ts[1:]) if b > a]
+    if len(gaps) < 3:
+        return None
+    return 1.0 / float(np.median(gaps))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_replica_isolation_node_kill_touches_only_its_replica(seed):
+    """Kill one replica's node mid-serve: the touched replica re-places
+    inside its own group; the survivors' pipelines, timings, and measured
+    cadence are bit-for-bit untouched."""
+    dep = _replicated_deployment(seed)
+    rset = dep.replicaset
+    n = 90
+    ids = [dep.submit(jnp.ones((D,)) * 0.1).req_id for _ in range(n)]
+    while len(dep.loop.completed) < n // 3:
+        dep.step()
+
+    victim_replica = 0
+    victim = rset.controls[victim_replica].pipeline.pods[1].node_id
+    survivors = [r for r in range(rset.n_replicas) if r != victim_replica]
+    pre_pipes = [dep.loop.loops[r]._bound_pipeline for r in survivors]
+    pre_link_s = [list(dep.loop.loops[r]._link_s) for r in survivors]
+    kill_clock = {r: dep.loop.loops[r].clock_s for r in survivors}
+    dep.inject(NodeFailed(victim))
+
+    while dep.loop.backlog or dep.pending:
+        dep.step()
+        assert_router_conserved(dep, ids)
+    assert len(dep.loop.completed) == n and not dep.loop.failed
+
+    # the touched replica recovered inside its own group, and ONLY its
+    # resident microbatches were requeued
+    assert not rset.retired[victim_replica]
+    obs = rset.controls[victim_replica].observed()
+    assert obs.healthy and victim not in obs.path
+    assert set(obs.path) <= rset.groups[victim_replica]
+    for i, r in enumerate(survivors):
+        loop = dep.loop.loops[r]
+        assert loop._requeues == 0, "a survivor requeued microbatches"
+        assert loop._bound_pipeline is pre_pipes[i], "a survivor was rebound"
+        assert list(loop._link_s) == pre_link_s[i], "survivor timings changed"
+        assert all(a.kind == "noop" for a in rset.controls[r].history)
+    # every retried request belongs to the victim replica
+    for req in dep.loop.completed:
+        if req.attempts > 0:
+            assert req.replica == victim_replica
+
+    # survivors' measured cadence is unchanged across the kill (within 5%)
+    for r in survivors:
+        reqs = dep.loop.loops[r].completed
+        pre = _window_rate(reqs, 0.0, kill_clock[r])
+        post = _window_rate(reqs, kill_clock[r], float("inf"))
+        if pre is not None and post is not None:
+            assert post == pytest.approx(pre, rel=0.05)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_replica_retirement_redistributes_to_survivors(seed):
+    """With no spare node in the group, a kill retires the replica: its
+    resident requests are reclaimed and completed by the survivors, which
+    themselves stay untouched."""
+    dep = _replicated_deployment(seed, group_size=3)
+    rset = dep.replicaset
+    n = 60
+    ids = [dep.submit(jnp.ones((D,)) * 0.1).req_id for _ in range(n)]
+    while len(dep.loop.completed) < n // 4:
+        dep.step()
+    victim = rset.controls[0].pipeline.pods[1].node_id
+    dep.inject(NodeFailed(victim))
+    while dep.loop.backlog or dep.pending:
+        dep.step()
+        assert_router_conserved(dep, ids)
+    assert rset.retired[0]
+    assert len(dep.loop.completed) == n and not dep.loop.failed
+    dispatched_at_retirement = dep.loop.dispatched[0]
+    # redistributed requests finished on a survivor with a charged attempt
+    moved = [r for r in dep.loop.completed if r.attempts > 0]
+    assert moved and all(r.replica in (1, 2) for r in moved)
+    for r in (1, 2):
+        assert dep.loop.loops[r]._requeues == 0
+        assert all(a.kind == "noop" for a in rset.controls[r].history)
+    # the router never dispatched to the corpse again
+    assert dep.loop.dispatched[0] == dispatched_at_retirement
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_replica_rolling_version_bump_keeps_serving(seed):
+    """A version bump rolls the replicas one at a time: versions advance
+    monotonically one replica per transition, and aggregate serving never
+    stops (completions strictly increase across every transition)."""
+    dep = _replicated_deployment(seed)
+    rset = dep.replicaset
+    n = 90
+    ids = [dep.submit(jnp.ones((D,)) * 0.1).req_id for _ in range(n)]
+    while len(dep.loop.completed) < n // 4:
+        dep.step()
+    dep.store.publish(1)
+    assert dep.poll_model_updates()
+    transitions = []  # (version tuple, completions at the moment of change)
+    last = tuple(c.desired.version for c in rset.controls)
+    while dep.loop.backlog or dep.pending:
+        dep.step()
+        assert_router_conserved(dep, ids)
+        now = tuple(c.desired.version for c in rset.controls)
+        if now != last:
+            changed = sum(a != b for a, b in zip(now, last))
+            assert changed == 1, "two replicas bumped in one step"
+            transitions.append((now, len(dep.loop.completed)))
+            last = now
+    assert last == (1,) * rset.n_replicas
+    assert len(transitions) == rset.n_replicas
+    # zero-downtime: the set kept completing requests between transitions
+    counts = [c for _, c in transitions]
+    assert all(b > a for a, b in zip(counts, counts[1:])), counts
+    assert len(dep.loop.completed) == n and not dep.loop.failed
+
+    # post-roll requests carry v1 math
+    import jax
+
+    req = dep.submit(jnp.ones((D,)) * 0.1)
+    dep.drain()
+    ws = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (8, D, D)) * 0.3)
+    ref = jnp.ones((D,)) * 0.1
     for w in ws:
         ref = jnp.tanh(ref @ w)
     np.testing.assert_allclose(np.asarray(req.result), np.asarray(ref), rtol=1e-5)

@@ -1,0 +1,126 @@
+"""Replica-set planner properties: the split, the plans, and ``"auto"``.
+
+Driven through the ``_hypothesis_compat`` shim over randomly generated
+chains and wireless clusters:
+
+  * ``split_cluster`` partitions exactly the hosting nodes into R disjoint,
+    balanced groups (the dispatcher never joins a group);
+  * every feasible per-replica plan obeys the same structural invariants the
+    single-pipeline property suite pins (contiguous, exhaustive, within
+    capacity) and places strictly inside its own group -- paths are pairwise
+    node-disjoint across replicas;
+  * ``replicas="auto"`` never predicts less aggregate throughput than
+    ``replicas=1`` on any cluster where the single pipeline is feasible
+    (R=1 is always in auto's candidate set, so width only ever helps).
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.api import Planner, split_cluster, subcluster
+from repro.core.graph import chain
+from repro.core.simulate import random_cluster
+
+SIZES = st.lists(
+    st.tuples(st.integers(1, 50), st.integers(1, 1000)), min_size=2, max_size=8
+)
+
+
+def _planner():
+    return Planner()  # registry defaults: min_bottleneck + color_coding
+
+
+# ---------------------------------------------------------------------------
+# The split itself
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n_nodes=st.integers(2, 14), replicas=st.integers(1, 5),
+       seed=st.integers(0, 10_000))
+def test_split_cluster_partitions_hosting_nodes(n_nodes, replicas, seed):
+    comm = random_cluster(n_nodes, 1000.0, seed=seed)
+    hosting = [i for i in range(comm.n) if comm.node_capacity[i] > 0]
+    if replicas > len(hosting):
+        with pytest.raises(ValueError):
+            split_cluster(comm, replicas, dispatcher=0)
+        return
+    groups = split_cluster(comm, replicas, dispatcher=0)
+    assert len(groups) == replicas
+    flat = [node for g in groups for node in g]
+    assert sorted(flat) == sorted(hosting), "groups must tile the hosting nodes"
+    assert 0 not in flat, "the dispatcher never joins a group"
+    sizes = [len(g) for g in groups]
+    assert max(sizes) - min(sizes) <= 1, "groups must stay balanced"
+    # the masked view really is the group: no capacity, no links outside
+    for g in groups:
+        sub = subcluster(comm, g, keep=(0,))
+        outside = set(range(comm.n)) - set(g) - {0}
+        for i in outside:
+            assert sub.node_capacity[i] == 0.0
+            assert not np.any(sub.bw[i, :]) and not np.any(sub.bw[:, i])
+        assert sub.node_capacity[0] <= 0.0, "dispatcher may not host"
+
+
+# ---------------------------------------------------------------------------
+# Per-replica plans: same invariants as the single-pipeline property suite
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(sizes=SIZES, n_nodes=st.integers(4, 10), replicas=st.integers(2, 3),
+       seed=st.integers(0, 10_000), cap_scale=st.integers(2, 5))
+def test_replica_plans_pass_partition_and_placement_invariants(
+        sizes, n_nodes, replicas, seed, cap_scale):
+    g = chain("prop", sizes)
+    cap = max(l.param_bytes for l in g.layers) * cap_scale
+    comm = random_cluster(n_nodes, float(cap), seed=seed)
+    rp = _planner().plan_replicated(
+        g, comm, replicas=replicas, dispatcher=0, device_flops=1e9,
+    )
+    if not rp.feasible:
+        return
+    assert rp.n_replicas == replicas
+    seen_nodes = set()
+    for plan, group in zip(rp.replicas, rp.groups):
+        parts = plan.partition.partitions
+        # contiguous + exhaustive + within capacity (the single-pipeline
+        # invariants from test_partitioner_properties, per replica)
+        assert parts[0].start == 0 and parts[-1].stop == len(g)
+        for a, b in zip(parts, parts[1:]):
+            assert a.stop == b.start
+        for p in parts:
+            assert p.stop > p.start
+            assert p.param_bytes == g.segment_param_bytes(p.start, p.stop)
+            assert p.param_bytes <= cap
+        # placement stays inside the replica's own group, injectively
+        path = list(plan.path)
+        assert len(path) == len(set(path))
+        assert set(path) <= set(group), "placed outside the replica's group"
+        assert seen_nodes.isdisjoint(path), "replicas share a node"
+        seen_nodes.update(path)
+
+
+# ---------------------------------------------------------------------------
+# "auto" never loses to a single pipeline
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(sizes=SIZES, n_nodes=st.integers(3, 10), seed=st.integers(0, 10_000),
+       cap_scale=st.integers(2, 6))
+def test_auto_replicas_never_below_single_pipeline(sizes, n_nodes, seed,
+                                                   cap_scale):
+    g = chain("prop", sizes)
+    cap = max(l.param_bytes for l in g.layers) * cap_scale
+    comm = random_cluster(n_nodes, float(cap), seed=seed)
+    planner = _planner()
+    single = planner.plan_replicated(
+        g, comm, replicas=1, dispatcher=0, device_flops=1e9,
+    )
+    if not single.feasible:
+        return
+    auto = planner.plan_replicated(
+        g, comm, replicas="auto", dispatcher=0, device_flops=1e9,
+    )
+    assert auto.feasible, "R=1 is a feasible candidate, auto may not fail"
+    assert auto.predicted_throughput >= single.predicted_throughput * (1 - 1e-9)

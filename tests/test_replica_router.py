@@ -1,0 +1,200 @@
+"""Cluster-wide replica router: conservation, fairness, and queue bounds.
+
+Property suite (via the ``_hypothesis_compat`` shim, so it runs with real
+hypothesis or the deterministic fallback) over the ``ReplicatedServingLoop``:
+
+  * **request conservation** -- across random replica counts and random
+    churn (node kills incl. whole-replica retirement, link degradations,
+    rolling version bumps), every admitted request is in exactly one place
+    at every step and eventually completes or is failed with its attempt
+    budget exhausted;
+  * **no starvation** -- on a healthy symmetric cluster every replica
+    receives dispatches and completes requests (shortest-expected-wait must
+    not fixate);
+  * **bounded queues** -- each replica's undelivered backlog never exceeds
+    ``replica_backlog`` and each stage's in-queue never exceeds
+    ``queue_depth``; overflow waits in the cluster-wide queue
+    (backpressure), it is never dropped;
+  * **routing policy** -- on an asymmetric cluster the faster replica gets
+    more work.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from _router_helpers import assert_router_conserved
+
+from repro.api import ClusterSpec, DeploymentSpec, deploy
+from repro.cluster import LinkDegraded, NodeFailed
+from repro.cluster.engine import ReplicatedServingLoop
+from repro.core.graph import Layer, LayerGraph
+from repro.core.placement import CommGraph
+
+N_LAYERS = 6
+PARAM = 1_000_000
+ACT = 120_000
+FLOPS = 8_000_000
+CAPACITY = 2 * PARAM * 1.05  # 2 layers per node -> 3-part pipelines
+
+
+def _graph(flops=FLOPS):
+    layers = tuple(
+        Layer(f"l{i}", param_bytes=PARAM, out_bytes=ACT, flops=flops)
+        for i in range(N_LAYERS)
+    )
+    return LayerGraph("router6", layers, in_bytes=ACT // 2)
+
+
+def _symmetric_comm(n_hosting, bw=15e6):
+    mat = np.full((n_hosting + 1, n_hosting + 1), float(bw))
+    np.fill_diagonal(mat, 0.0)
+    cap = np.full(n_hosting + 1, CAPACITY)
+    cap[0] = -1.0  # dispatcher hosts nothing
+    return CommGraph(bw=mat, node_capacity=cap)
+
+
+def _deploy(replicas, group_size, *, seed=0, microbatch=1, flops=FLOPS):
+    spec = DeploymentSpec(
+        model=_graph(flops),
+        cluster=ClusterSpec(comm=_symmetric_comm(replicas * group_size)),
+        capacity=CAPACITY,
+        seed=seed,
+        microbatch=microbatch,
+        replicas=replicas,
+    )
+    return deploy(spec)
+
+
+# ---------------------------------------------------------------------------
+# Conservation under random replica counts + churn
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), replicas=st.integers(2, 3))
+def test_request_conservation_under_random_replica_churn(seed, replicas):
+    d = _deploy(replicas, group_size=4, seed=seed % 97, microbatch=2)
+    rset = d.replicaset
+    rng = np.random.default_rng(seed)
+    n = 40
+    ids = [d.submit(jnp.ones((4,))).req_id for _ in range(n)]
+    events = 0
+    steps = 0
+    while d.loop.backlog or d.pending:
+        steps += 1
+        assert steps < 10_000, "router did not drain"
+        if events < 6 and rng.random() < 0.2:
+            events += 1
+            roll = rng.random()
+            if roll < 0.5:
+                # kill anywhere except the last group (liveness floor): this
+                # may retire whole replicas, which must also conserve
+                victims = [
+                    node for g in rset.groups[:-1] for node in g
+                    if d.cluster.nodes[node].healthy
+                ]
+                if victims:
+                    d.inject(NodeFailed(int(rng.choice(victims))))
+            elif roll < 0.8:
+                a, b = (int(x) for x in rng.choice(d.cluster.n, 2, replace=False))
+                d.inject(LinkDegraded(a, b, float(rng.uniform(0.3, 0.8))))
+            else:
+                latest = max(c.desired.version for c in rset.controls)
+                d.store.publish(latest + 1)
+                d.poll_model_updates()
+        d.step()
+        assert_router_conserved(d, ids)
+    assert events > 0 or not rset.retired[0]  # scenario sanity
+    assert len(d.loop.completed) + len(d.loop.failed) == n
+    # the only way out without completing is an exhausted attempt budget
+    for req in d.loop.failed:
+        assert req.attempts >= d.loop.max_attempts
+    # the protected last replica never retired, so the set stayed live
+    assert not rset.retired[-1]
+
+
+# ---------------------------------------------------------------------------
+# No starvation of any healthy replica
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1_000), replicas=st.integers(2, 4))
+def test_no_starvation_of_any_healthy_replica(seed, replicas):
+    d = _deploy(replicas, group_size=3, seed=seed % 13)
+    n = 30 * replicas
+    for _ in range(n):
+        d.submit(jnp.ones((4,)))
+    d.drain()
+    assert len(d.loop.completed) == n and not d.loop.failed
+    assert all(count > 0 for count in d.loop.dispatched)
+    for sub in d.loop.loops:
+        # symmetric cluster: every replica carries a fair share of the load
+        assert len(sub.completed) >= n // (4 * replicas)
+    assert all(r.replica is not None for r in d.loop.completed)
+
+
+# ---------------------------------------------------------------------------
+# Bounded per-replica queues + backpressure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("replica_backlog", [2, 5])
+def test_replica_backlog_and_stage_queues_bounded(replica_backlog):
+    d = _deploy(2, group_size=3)
+    d.loop = ReplicatedServingLoop(
+        d.replicaset, microbatch=1, queue_depth=2,
+        replica_backlog=replica_backlog,
+    )
+    n = 40
+    for _ in range(n):
+        d.submit(jnp.ones((4,)))
+    saw_backpressure = False
+    while d.loop.backlog:
+        d.step()
+        for sub in d.loop.loops:
+            assert sub.backlog <= replica_backlog
+            for stage in sub._stages:
+                assert len(stage.queue) + stage.reserved <= 2
+        if d.loop.queue:
+            saw_backpressure = True  # overflow held centrally, not dropped
+    assert saw_backpressure
+    assert len(d.loop.completed) == n and not d.loop.failed
+
+
+# ---------------------------------------------------------------------------
+# Shortest-expected-wait routing
+# ---------------------------------------------------------------------------
+
+def test_router_prefers_the_faster_replica():
+    """Two replicas, one with 8x slower links on a link-bound model: the
+    shortest-expected-wait policy must route the slow replica less work."""
+    n_hosting = 6
+    fast, slow = {1, 2, 3}, {4, 5, 6}
+    bw = np.full((n_hosting + 1, n_hosting + 1), 16e6)
+    for i in range(n_hosting + 1):
+        for j in range(n_hosting + 1):
+            if i in slow or j in slow:
+                bw[i, j] = 2e6
+    np.fill_diagonal(bw, 0.0)
+    cap = np.full(n_hosting + 1, CAPACITY)
+    cap[0] = -1.0
+    spec = DeploymentSpec(
+        model=_graph(flops=0),  # link-bound: stage compute is free
+        cluster=ClusterSpec(comm=CommGraph(bw=bw, node_capacity=cap)),
+        capacity=CAPACITY,
+        microbatch=1,
+        replicas=2,
+    )
+    d = deploy(spec)
+    groups = [set(g) for g in d.replicaset.groups]
+    assert sorted(map(sorted, groups)) == [sorted(fast), sorted(slow)], (
+        "bandwidth-aware split should separate the cliques"
+    )
+    fast_idx = next(i for i, g in enumerate(groups) if g == fast)
+    n = 80
+    for _ in range(n):
+        d.submit(jnp.ones((4,)))
+    d.drain()
+    assert len(d.loop.completed) == n and not d.loop.failed
+    counts = d.loop.dispatched
+    assert counts[fast_idx] > counts[1 - fast_idx], counts
