@@ -27,6 +27,7 @@ def main() -> int:
     from benchmarks import (
         algo_scaling,
         approx_ratio,
+        bandwidth_sweep,
         churn_throughput,
         fig3_bottleneck,
         joint_opt,
@@ -52,6 +53,9 @@ def main() -> int:
         "replicas": (replica_scaling,
                      lambda: replica_scaling.run(
                          requests=24 if args.fast else 60)),
+        "bandwidth": (bandwidth_sweep,
+                      lambda: bandwidth_sweep.run(
+                          requests=24 if args.fast else 48)),
     }
     failures = []
     for name, (module, fn) in benches.items():

@@ -299,6 +299,8 @@ class Deployment:
             joint=new_joint,
             n_classes=current.n_classes,
             seed=current.seed,
+            codec=current.codec,
+            accuracy_tolerance=current.accuracy_tolerance,
         )
         if self.replicaset is None:
             return self.control.replan(planner)
@@ -326,6 +328,7 @@ class Deployment:
             "healthy": obs.healthy,
             "bottleneck_latency_s": obs.bottleneck_latency,
             "strategies": dict(plan.strategies) if plan else {},
+            "codecs": list(plan.codecs) if plan else [],
             "predicted_bottleneck_s": plan.predicted_bottleneck_s if plan else None,
             "predicted_throughput": plan.predicted_throughput if plan else None,
             "reconcile_actions": [a.kind for a in self.control.history],
@@ -352,6 +355,10 @@ class Deployment:
                 "predicted_throughput": (
                     control.last_plan.predicted_throughput
                     if control.last_plan else None
+                ),
+                "codecs": (
+                    list(control.last_plan.codecs)
+                    if control.last_plan else []
                 ),
                 "reconcile_actions": [a.kind for a in control.history],
             })

@@ -46,9 +46,11 @@ class Plan:
     placement: PlacementResult
     # the placement objective: max link latency on UNCOMPRESSED boundaries
     predicted_bottleneck_s: float = float("inf")
-    # 1 / pipeline period, compression- and compute-aware (simulator metric)
+    # 1 / pipeline period, codec-, compression- and compute-aware
     predicted_throughput: float = 0.0
     strategies: tuple[tuple[str, str], ...] = ()  # (kind, name) pairs
+    # transfer codec per hop (len n_parts + 1); () = all-identity legacy plan
+    codecs: tuple[str, ...] = ()
 
     @property
     def feasible(self) -> bool:
@@ -105,6 +107,7 @@ class Plan:
             "predicted_throughput": self.predicted_throughput,
             "algorithm": self.placement.algorithm,
             "strategies": {k: v for k, v in self.strategies},
+            "codecs": list(self.codecs),
         }
 
 
@@ -302,13 +305,21 @@ class Planner:
         *,
         n_classes: int | None = 4,
         seed: int = 0,
+        codec: str | None = None,
+        accuracy_tolerance: float | None = None,
     ):
+        from repro.dataplane import AUTO, default_codec, get_codec
+
         self.partitioner = get_strategy(
             "partitioner", partitioner or default_strategy("partitioner"))
         self.placer = get_strategy("placer", placer or default_strategy("placer"))
         self.joint = get_strategy("joint", joint) if joint is not None else None
         self.n_classes = n_classes
         self.seed = seed
+        self.codec = codec or default_codec()
+        if self.codec != AUTO:
+            get_codec(self.codec)  # typos raise here, with suggestions
+        self.accuracy_tolerance = accuracy_tolerance
 
     @classmethod
     def from_spec(cls, spec: "DeploymentSpec") -> "Planner":
@@ -318,6 +329,8 @@ class Planner:
             joint=spec.joint,
             n_classes=spec.n_classes,
             seed=spec.seed,
+            codec=spec.codec,
+            accuracy_tolerance=spec.accuracy_tolerance,
         )
 
     def strategy_names(self) -> tuple[tuple[str, str], ...]:
@@ -382,16 +395,48 @@ class Planner:
 
         if not (part.feasible and place.feasible):
             return Plan(version, part, place, strategies=self.strategy_names())
+        codecs = self.assign_codecs(
+            [in_bytes, *(p.out_bytes for p in part.partitions[:-1]), out_bytes],
+            place.path, comm.bw,
+            dispatcher=dispatcher, flops_per_node=device_flops,
+            compression_ratio=compression_ratio,
+        )
         metrics = evaluate_pipeline(
             part.partitions, place.path, comm,
             device_flops=device_flops, in_bytes=in_bytes, out_bytes=out_bytes,
             dispatcher=dispatcher, compression_ratio=compression_ratio,
+            codecs=codecs,
         )
         return Plan(
             version, part, place,
             predicted_bottleneck_s=float(place.bottleneck_latency),
             predicted_throughput=float(metrics.effective_throughput),
             strategies=self.strategy_names(),
+            codecs=codecs,
+        )
+
+    def assign_codecs(
+        self,
+        hop_bytes,
+        path,
+        bw,
+        *,
+        dispatcher: int | None = None,
+        flops_per_node=None,
+        compression_ratio: float = 1.0,
+    ) -> tuple[str, ...]:
+        """Codec-per-hop for a placed pipeline, under this planner's codec
+        config (a fixed name on every inter-stage hop, or the ``"auto"``
+        per-link optimum within ``accuracy_tolerance``).  Also the recovery
+        path's entry point: a re-placement changes the links, so the
+        dispatcher re-runs the assignment for the new path."""
+        from repro.dataplane import assign_link_codecs
+
+        return assign_link_codecs(
+            hop_bytes, path, bw,
+            codec=self.codec, tolerance=self.accuracy_tolerance,
+            flops_per_node=flops_per_node, dispatcher=dispatcher,
+            compression_ratio=compression_ratio,
         )
 
     def place(

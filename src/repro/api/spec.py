@@ -127,6 +127,19 @@ class DeploymentSpec:
         cluster's max node capacity (the dispatcher's historical default).
     compression_ratio:
         boundary compression (paper: ZFP/LZ4; ours: int8 analogue).
+    codec:
+        inter-stage transfer codec, by registry name (``identity`` /
+        ``fp16`` / ``int8`` / ``topk-sparse``; see
+        ``repro.dataplane.list_codecs``).  ``"auto"`` lets the planner pick
+        the throughput-maximizing codec *per link* among those whose
+        reported error bound fits ``accuracy_tolerance``; ``None`` is the
+        registry default (``identity``, the historical raw wire).
+    accuracy_tolerance:
+        per-link SLO: every inter-stage transfer's codec must report a
+        round-trip error bound (relative to ``max|x|``) at most this value.
+        ``None`` means unconstrained.  A named lossy ``codec`` that exceeds
+        the tolerance is a validation error; ``"auto"`` simply drops the
+        over-tolerance candidates (``identity`` is always admissible).
     partitioner / placer:
         registry names; ``None`` means the registered default.
     joint:
@@ -163,6 +176,8 @@ class DeploymentSpec:
     cluster: Any
     capacity: float | None = None
     compression_ratio: float = 1.0
+    codec: str | None = None
+    accuracy_tolerance: float | None = None
     partitioner: str | None = None
     placer: str | None = None
     joint: str | None = None
@@ -246,6 +261,32 @@ class DeploymentSpec:
         if self.compression_ratio <= 0:
             issues.append(SpecIssue("bad_compression",
                                     "compression_ratio must be > 0"))
+
+        # transfer codec + per-link accuracy tolerance
+        from repro.dataplane import AUTO, UnknownCodecError, get_codec
+
+        named_codec = None
+        if self.codec is not None and self.codec != AUTO:
+            try:
+                named_codec = get_codec(self.codec)
+            except UnknownCodecError as e:
+                issues.append(SpecIssue("unknown_codec", str(e)))
+        if self.accuracy_tolerance is not None:
+            if self.accuracy_tolerance < 0:
+                issues.append(SpecIssue(
+                    "bad_tolerance",
+                    f"accuracy_tolerance must be >= 0, "
+                    f"got {self.accuracy_tolerance!r}",
+                ))
+            elif (named_codec is not None
+                  and named_codec.error_bound > self.accuracy_tolerance):
+                issues.append(SpecIssue(
+                    "codec_exceeds_tolerance",
+                    f"codec {self.codec!r} reports a per-link error bound of "
+                    f"{named_codec.error_bound:.3g} but accuracy_tolerance is "
+                    f"{self.accuracy_tolerance:.3g}; raise the tolerance or "
+                    f"use codec='auto' to let the planner pick within it",
+                ))
 
         if self.serving not in ("pipelined", "sync"):
             issues.append(SpecIssue(

@@ -375,7 +375,7 @@ class ControlPlane:
             bw = self.cluster.true_bandwidth(
                 pipe.pods[i].node_id, pipe.pods[i + 1].node_id
             )
-            bytes_ = pipe.boundary_bytes[i] / pipe.compression_ratio
+            bytes_ = pipe.wire_bytes(i)  # compression_ratio + hop codec
             lat = max(lat, float("inf") if bw <= 0 else bytes_ / bw)
         graph = self.desired.graph if self.desired else None
         lead = self.dispatcher.leader

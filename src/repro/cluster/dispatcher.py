@@ -173,6 +173,7 @@ class Dispatcher:
             executor,
             boundary_bytes=list(plan.partition.boundaries),
             compression_ratio=compression_ratio,
+            link_codecs=list(plan.codecs) if plan.codecs else None,
         )
 
     # -- fault tolerance -------------------------------------------------------
@@ -236,6 +237,16 @@ class Dispatcher:
                 pod.restart_on(node)
             else:
                 pod.node_id = node
+        # joint codec x placement: the links changed, so the codec-per-link
+        # assignment is re-solved for the new path and follows the pipeline
+        codecs = self.planner.assign_codecs(
+            [graph.in_bytes, *pipeline.boundary_bytes,
+             graph.layers[-1].out_bytes],
+            place.path, comm.bw,
+            dispatcher=self.leader, flops_per_node=self.node_flops(),
+            compression_ratio=pipeline.compression_ratio,
+        )
+        pipeline.link_codecs = list(codecs)
         # the plan record must track what is actually deployed: same
         # partitions, new placement, metrics re-scored on the re-probed comm
         if self.last_plan is not None:
@@ -248,12 +259,14 @@ class Dispatcher:
                 out_bytes=graph.layers[-1].out_bytes,
                 dispatcher=self.leader,
                 compression_ratio=pipeline.compression_ratio,
+                codecs=codecs,
             )
             self.last_plan = dataclasses.replace(
                 self.last_plan,
                 placement=place,
                 predicted_bottleneck_s=float(place.bottleneck_latency),
                 predicted_throughput=float(metrics.effective_throughput),
+                codecs=codecs,
             )
         return pipeline
 

@@ -126,6 +126,11 @@ class PipelinedServingLoop:
         self._stages: list[StageState] = []
         self._link_s: list[float] = []  # per-hop transfer time, len k+1
         self._links_busy: list[Microbatch | None] = []
+        self._link_codecs: list = []  # Codec per hop (None = raw / no wire)
+        self._link_raw: list[float] = []  # raw boundary bytes per hop
+        self._link_wire: list[float] = []  # on-wire bytes per hop
+        self._link_busy_s: list[float] = []  # time each link spent occupied
+        self._link_xfers: list[int] = []  # completed transfers per hop
         self._mb_completed = 0
         self._requeues = 0  # microbatches pulled off affected stages
         self._bound_pipeline = None  # identity of the pipeline we're bound to
@@ -211,6 +216,22 @@ class PipelinedServingLoop:
             "requeued_microbatches": self._requeues,
             "queue_depth": self.queue_depth,
             "link_s": list(self._link_s),
+            "links": [
+                {
+                    "hop": h,
+                    "codec": codec.name if codec is not None else "identity",
+                    "raw_bytes": self._link_raw[h],
+                    "wire_bytes": self._link_wire[h],
+                    "compression_x": (
+                        self._link_raw[h] / self._link_wire[h]
+                        if self._link_wire[h] > 0 else 1.0
+                    ),
+                    "link_s": self._link_s[h],
+                    "utilization": self._link_busy_s[h] / t if t > 0 else 0.0,
+                    "transfers": self._link_xfers[h],
+                }
+                for h, codec in enumerate(self._link_codecs)
+            ],
             "stages": [
                 {
                     "stage": st.index,
@@ -292,6 +313,7 @@ class PipelinedServingLoop:
         comm = disp.probed if disp.probed is not None else control.cluster.comm
         path = [p.node_id for p in pipe.pods]
         parts = [p.partition for p in pipe.pods]
+        codecs = [pipe.hop_codec(h) for h in range(len(path) + 1)]
         compute_s, link_s = service_times(
             parts, path, comm.bw,
             flops_per_node=[n.flops_per_s for n in control.cluster.nodes],
@@ -299,8 +321,28 @@ class PipelinedServingLoop:
             out_bytes=graph.layers[-1].out_bytes,
             dispatcher=disp.leader,
             compression_ratio=pipe.compression_ratio,
+            codecs=None if pipe.link_codecs is None else pipe.link_codecs,
         )
         k = len(path)
+        # per-hop byte model for the link report: raw boundary bytes (after
+        # the legacy compression knob) vs what the codec puts on the wire;
+        # a hop with colocated endpoints or zero bytes carries no codec
+        hop_bytes = [graph.in_bytes, *pipe.boundary_bytes,
+                     graph.layers[-1].out_bytes]
+        ends = [(disp.leader, path[0] if path else None)]
+        ends += [(path[i], path[i + 1]) for i in range(k - 1)]
+        ends += [(path[-1] if path else None, disp.leader)]
+        self._link_codecs, self._link_raw, self._link_wire = [], [], []
+        for h in range(k + 1):
+            raw = float(hop_bytes[h]) / pipe.compression_ratio
+            a, b = ends[h]
+            active = raw > 0 and a is not None and b is not None and a != b
+            codec = codecs[h] if active else None
+            self._link_codecs.append(codec)
+            self._link_raw.append(raw if active else 0.0)
+            self._link_wire.append(
+                codec.wire_bytes(raw) if codec is not None
+                else (raw if active else 0.0))
         old_stages = self._stages
         carry_stats = len(old_stages) == k and affected is not _ALL
         self._stages = []
@@ -313,6 +355,9 @@ class PipelinedServingLoop:
             self._stages.append(st)
         self._link_s = link_s
         self._links_busy = [None] * (k + 1)
+        if not (carry_stats and len(self._link_busy_s) == k + 1):
+            self._link_busy_s = [0.0] * (k + 1)
+            self._link_xfers = [0] * (k + 1)
         self._bound_pipeline = pipe
         self._pod_sig = self._pod_signature()
 
@@ -417,6 +462,14 @@ class PipelinedServingLoop:
                 st.out.append(mb)
             else:  # transfer on hop idx finished
                 self._links_busy[idx] = None
+                self._link_busy_s[idx] += self._link_s[idx]
+                self._link_xfers[idx] += 1
+                codec = self._link_codecs[idx] if idx < len(self._link_codecs) else None
+                if codec is not None:
+                    # the receiver sees decode(encode(x)): the codec's real
+                    # transform (Pallas int8 stack, fp16, top-k) runs on the
+                    # activations riding the wire
+                    mb.x = codec.transcode(mb.x)
                 if idx == k:
                     self._complete(mb)
                 else:

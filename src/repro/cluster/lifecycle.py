@@ -141,12 +141,31 @@ class InferencePipeline:
         executor: ExecutorFn,
         boundary_bytes: Sequence[float],
         compression_ratio: float = 1.0,
+        link_codecs: Sequence[str] | None = None,
     ):
         self.cluster = cluster
         self.pods = list(pods)
         self.executor = executor
         self.boundary_bytes = list(boundary_bytes)
         self.compression_ratio = compression_ratio
+        # transfer codec per hop (len k+1, service_times indexing); None =
+        # all-identity (direct lifecycle construction, pre-dataplane tests)
+        self.link_codecs = list(link_codecs) if link_codecs is not None else None
+
+    def hop_codec(self, h: int):
+        """The ``repro.dataplane.Codec`` riding hop ``h`` (None = raw)."""
+        if self.link_codecs is None or not 0 <= h < len(self.link_codecs):
+            return None
+        from repro.dataplane import get_codec
+
+        return get_codec(self.link_codecs[h])
+
+    def wire_bytes(self, boundary_idx: int) -> float:
+        """On-wire bytes of partition boundary ``boundary_idx`` (hop
+        ``boundary_idx + 1``) after compression_ratio and the hop codec."""
+        raw = self.boundary_bytes[boundary_idx] / self.compression_ratio
+        codec = self.hop_codec(boundary_idx + 1)
+        return codec.wire_bytes(raw) if codec is not None else raw
 
     def path(self) -> list[int]:
         return [p.node_id for p in self.pods]
@@ -171,8 +190,13 @@ class InferencePipeline:
                 bw = self.cluster.true_bandwidth(
                     pod.node_id, self.pods[idx + 1].node_id
                 )
-                bytes_ = self.boundary_bytes[idx] / self.compression_ratio
+                bytes_ = self.wire_bytes(idx)
                 link_s.append(float("inf") if bw <= 0 else bytes_ / bw)
+                codec = self.hop_codec(idx + 1)
+                if codec is not None and pod.node_id != self.pods[idx + 1].node_id:
+                    # the receiver sees the decoded payload: lossy codecs
+                    # really alter the activations crossing the wire
+                    x = codec.transcode(x)
         return x, StepTrace(compute_s, link_s)
 
     def mark_node_failed(self, node_id: int) -> list[Pod]:

@@ -170,6 +170,7 @@ class ServingLoop:
             out_bytes=graph.layers[-1].out_bytes,
             dispatcher=disp.leader,
             compression_ratio=pipe.compression_ratio,
+            codecs=pipe.link_codecs,
         )
         finite = [s for s in compute_s + link_s if s != float("inf")]
         return sum(finite)

@@ -38,6 +38,18 @@ def link_latencies(
     return out
 
 
+def node_flops(flops_per_node, node: int | None) -> float:
+    """Resolve a scalar-or-per-node flops model for one node (0 = unmodelled).
+
+    The single dispatch point for ``flops_per_node``: ``service_times`` and
+    the data plane's codec cost model both price compute through it."""
+    if flops_per_node is None or node is None:
+        return 0.0
+    if np.isscalar(flops_per_node):
+        return float(flops_per_node)
+    return float(flops_per_node[node])
+
+
 def service_times(
     partitions: Sequence[Partition],
     path: Sequence[int],
@@ -48,6 +60,7 @@ def service_times(
     out_bytes: float = 0.0,
     dispatcher: int | None = None,
     compression_ratio: float = 1.0,
+    codecs: Sequence | None = None,
 ) -> tuple[list[float], list[float]]:
     """The single timing model shared by the discrete-event serving engine,
     the planner's prediction, and the TPU pipeline planner.
@@ -62,32 +75,52 @@ def service_times(
         ``link_s[k]`` is the last-stage -> dispatcher output transfer.
         Colocated endpoints (or zero bytes, or no dispatcher) cost 0.
 
+    ``codecs`` (one ``repro.dataplane.Codec`` or registered name per hop)
+    puts a transfer codec on each link: the hop's serial window is then
+    charged ``codec_encode (sender flops) + wire_bytes / bandwidth +
+    codec_decode (receiver flops)`` -- compressed bytes ride the wire, and
+    the codec's compute rides the link window it serializes.  ``None``
+    keeps every hop raw.  The legacy ``compression_ratio`` divides bytes
+    *before* the codec sees them (the knobs compose; both default off).
+
     The pipeline's steady-state period is ``max(compute_s + link_s)`` --
     every stage and every link is a serial resource, so the bottleneck one
     sets the cadence once the pipe is full.
     """
+    if codecs is not None:
+        from repro.dataplane import resolve_codecs
 
-    def hop(a: int | None, b: int | None, bytes_: float) -> float:
+        codecs = resolve_codecs(codecs)
+        if len(codecs) != len(path) + 1:
+            raise ValueError(
+                f"expected {len(path) + 1} hop codecs, got {len(codecs)}")
+
+    def flops_at(node: int | None) -> float:
+        return node_flops(flops_per_node, node)
+
+    def hop(a: int | None, b: int | None, bytes_: float, h: int) -> float:
         if bytes_ <= 0 or a is None or b is None or a == b:
             return 0.0
         rate = float(bw[a, b])
-        return float("inf") if rate <= 0 else (bytes_ / compression_ratio) / rate
+        raw = bytes_ / compression_ratio
+        if codecs is None:
+            return float("inf") if rate <= 0 else raw / rate
+        from repro.dataplane import link_charge_s
+
+        return link_charge_s(
+            codecs[h], raw, rate,
+            src_flops=flops_at(a), dst_flops=flops_at(b),
+        )
 
     compute = []
     for part, node in zip(partitions, path):
-        if flops_per_node is None:
-            compute.append(0.0)
-        else:
-            f = (
-                float(flops_per_node)
-                if np.isscalar(flops_per_node)
-                else float(flops_per_node[node])
-            )
-            compute.append(part.flops / f if f > 0 else 0.0)
-    links = [hop(dispatcher, path[0] if path else None, in_bytes)]
+        f = flops_at(node)
+        compute.append(part.flops / f if f > 0 else 0.0)
+    links = [hop(dispatcher, path[0] if path else None, in_bytes, 0)]
     for i in range(len(path) - 1):
-        links.append(hop(path[i], path[i + 1], float(partitions[i].out_bytes)))
-    links.append(hop(path[-1] if path else None, dispatcher, out_bytes))
+        links.append(
+            hop(path[i], path[i + 1], float(partitions[i].out_bytes), i + 1))
+    links.append(hop(path[-1] if path else None, dispatcher, out_bytes, len(path)))
     return compute, links
 
 
@@ -100,13 +133,16 @@ def evaluate_pipeline(
     out_bytes: float = 0.0,
     dispatcher: int | None = None,
     compression_ratio: float = 1.0,
+    codecs: Sequence | None = None,
 ) -> PipelineMetrics:
     """Score a (partition, placement) pair.
 
     ``compression_ratio`` models boundary compression (paper: ZFP/LZ4; ours:
-    blockwise int8): transferred bytes are divided by it.  ``in_bytes`` /
-    ``out_bytes`` charge the dispatcher round-trip hops when ``dispatcher``
-    is given (colocation costs nothing).
+    blockwise int8): transferred bytes are divided by it.  ``codecs`` (one
+    per hop, see ``service_times``) charges each link with its transfer
+    codec's ``encode + compressed transfer + decode`` window.  ``in_bytes``
+    / ``out_bytes`` charge the dispatcher round-trip hops when
+    ``dispatcher`` is given (colocation costs nothing).
     """
     if len(path) != len(partitions):
         raise ValueError("path length != number of partitions")
@@ -117,6 +153,7 @@ def evaluate_pipeline(
         out_bytes=out_bytes if dispatcher is not None else 0.0,
         dispatcher=dispatcher,
         compression_ratio=compression_ratio,
+        codecs=codecs,
     )
     lats = [h for h in hops if h > 0]
     bottleneck = max(lats, default=0.0)

@@ -1,3 +1,4 @@
 from repro.kernels.quantize.ops import dequantize_int8, quantize_int8
+from repro.kernels.quantize.ref import INT8_MAX_REL_ERROR
 
-__all__ = ["quantize_int8", "dequantize_int8"]
+__all__ = ["quantize_int8", "dequantize_int8", "INT8_MAX_REL_ERROR"]

@@ -37,43 +37,61 @@ def _dequant_kernel(q_ref, s_ref, x_ref, *, block: int):
 def quantize_int8_tpu(
     x: jax.Array, block: int = 256, row_tile: int = 256, interpret: bool = False
 ) -> tuple[jax.Array, jax.Array]:
-    """x (..., d) -> (int8 (..., d), f32 scales (..., d/block))."""
+    """x (..., d) -> (int8 (..., d), f32 scales (..., ceil(d/block))).
+
+    A ragged trailing dim is zero-padded to the next block boundary before
+    the kernel (padding never raises a block's max-abs, so the scales match
+    the ref's exactly) and sliced back after."""
     *lead, d = x.shape
+    nb = -(-d // block)
+    dp = nb * block
     n = 1
     for s in lead:
         n *= s
     x2 = x.reshape(n, d)
+    if dp != d:
+        x2 = jnp.pad(x2, ((0, 0), (0, dp - d)))
     rt = min(row_tile, n)
     if n % rt:
         rt = n
     q, s = pl.pallas_call(
         functools.partial(_quant_kernel, block=block),
         grid=(n // rt,),
-        in_specs=[pl.BlockSpec((rt, d), lambda i: (i, 0))],
+        in_specs=[pl.BlockSpec((rt, dp), lambda i: (i, 0))],
         out_specs=[
-            pl.BlockSpec((rt, d), lambda i: (i, 0)),
-            pl.BlockSpec((rt, d // block), lambda i: (i, 0)),
+            pl.BlockSpec((rt, dp), lambda i: (i, 0)),
+            pl.BlockSpec((rt, nb), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, d), jnp.int8),
-            jax.ShapeDtypeStruct((n, d // block), jnp.float32),
+            jax.ShapeDtypeStruct((n, dp), jnp.int8),
+            jax.ShapeDtypeStruct((n, nb), jnp.float32),
         ],
         interpret=interpret,
     )(x2)
-    return q.reshape(*lead, d), s.reshape(*lead, d // block)
+    return q[:, :d].reshape(*lead, d), s.reshape(*lead, nb)
 
 
 def dequantize_int8_tpu(
     q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16,
-    row_tile: int = 256, interpret: bool = False,
+    row_tile: int = 256, interpret: bool = False, block: int | None = None,
 ) -> jax.Array:
     *lead, d = q.shape
-    block = d // scale.shape[-1]
+    nb = scale.shape[-1]
+    if block is None:
+        if d % nb:
+            raise ValueError(
+                f"trailing dim {d} is ragged over {nb} scale blocks; "
+                f"pass the block= used to quantize"
+            )
+        block = d // nb
+    dp = nb * block
     n = 1
     for s in lead:
         n *= s
     q2 = q.reshape(n, d)
-    s2 = scale.reshape(n, d // block)
+    if dp != d:
+        q2 = jnp.pad(q2, ((0, 0), (0, dp - d)))
+    s2 = scale.reshape(n, nb)
     rt = min(row_tile, n)
     if n % rt:
         rt = n
@@ -81,11 +99,11 @@ def dequantize_int8_tpu(
         functools.partial(_dequant_kernel, block=block),
         grid=(n // rt,),
         in_specs=[
-            pl.BlockSpec((rt, d), lambda i: (i, 0)),
-            pl.BlockSpec((rt, d // block), lambda i: (i, 0)),
+            pl.BlockSpec((rt, dp), lambda i: (i, 0)),
+            pl.BlockSpec((rt, nb), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((rt, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, d), dtype),
+        out_specs=pl.BlockSpec((rt, dp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dp), dtype),
         interpret=interpret,
     )(q2, s2)
-    return x.reshape(*lead, d)
+    return x[:, :d].reshape(*lead, d)

@@ -26,11 +26,12 @@ def quantize_int8(
     return quantize_ref(x, block=block)
 
 
-@partial(jax.jit, static_argnames=("dtype", "use_pallas", "interpret"))
+@partial(jax.jit, static_argnames=("dtype", "block", "use_pallas", "interpret"))
 def dequantize_int8(
     q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16, *,
-    use_pallas: bool = False, interpret: bool = False,
+    block: int | None = None, use_pallas: bool = False, interpret: bool = False,
 ) -> jax.Array:
     if use_pallas:
-        return dequantize_int8_tpu(q, scale, dtype=dtype, interpret=interpret)
-    return dequantize_ref(q, scale, dtype=dtype)
+        return dequantize_int8_tpu(q, scale, dtype=dtype, block=block,
+                                   interpret=interpret)
+    return dequantize_ref(q, scale, dtype=dtype, block=block)

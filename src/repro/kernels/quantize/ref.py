@@ -4,6 +4,17 @@ SEIFER compresses inter-partition activations with ZFP/LZ4 on the wire; the
 TPU-native analogue is blockwise symmetric int8: each ``block``-wide slice of
 the trailing dim gets an f32 scale = max|x| / 127.  ~2x wire compression for
 bf16 activations at <0.5% relative error, with an MXU/VPU-friendly layout.
+
+A trailing dim that does not divide ``block`` is zero-padded to the next
+block boundary internally (a ragged last block); padding zeros never raise a
+block's max-abs, so scales -- and therefore the error bound -- are identical
+to an exact ragged computation.
+
+``INT8_MAX_REL_ERROR`` is the codec's contract: the round-trip error of any
+element is at most ``scale / 2 = max|x_block| / 254``, i.e. at most
+``INT8_MAX_REL_ERROR`` relative to the block's max magnitude.  The kernel
+tests assert this bound and the data plane's ``accuracy_tolerance`` check
+consumes the same constant (``repro.dataplane.codecs.Int8Codec``).
 """
 
 from __future__ import annotations
@@ -11,21 +22,46 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# max |dequant(quant(x)) - x| / max|x_block|: round-off is half a step of
+# size scale = max/127, so 0.5/127 (plus f32 rounding slack in the tests).
+INT8_MAX_REL_ERROR = 0.5 / 127.0
+
+
+def _pad_to_block(x: jax.Array, block: int) -> tuple[jax.Array, int]:
+    """Zero-pad the trailing dim up to a block multiple; returns (x, nb)."""
+    *lead, d = x.shape
+    nb = -(-d // block)
+    pad = nb * block - d
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    return x, nb
+
 
 def quantize_ref(x: jax.Array, block: int = 256) -> tuple[jax.Array, jax.Array]:
-    """x (..., d) -> (q int8 (..., d), scales f32 (..., d/block))."""
+    """x (..., d) -> (q int8 (..., d), scales f32 (..., ceil(d/block)))."""
     *lead, d = x.shape
-    if d % block:
-        raise ValueError(f"trailing dim {d} must divide block {block}")
-    xb = x.astype(jnp.float32).reshape(*lead, d // block, block)
+    xp, nb = _pad_to_block(x.astype(jnp.float32), block)
+    xb = xp.reshape(*lead, nb, block)
     scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
     safe = jnp.maximum(scale, 1e-12)
     q = jnp.clip(jnp.round(xb / safe[..., None]), -127, 127).astype(jnp.int8)
-    return q.reshape(*lead, d), scale
+    return q.reshape(*lead, nb * block)[..., :d], scale
 
 
-def dequantize_ref(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+def dequantize_ref(
+    q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16, block: int | None = None
+) -> jax.Array:
+    """Inverse of ``quantize_ref``.  ``block`` may be omitted only when the
+    trailing dim divides the scale count exactly (no ragged last block)."""
     *lead, d = q.shape
-    block = d // scale.shape[-1]
-    xb = q.reshape(*lead, d // block, block).astype(jnp.float32)
-    return (xb * scale[..., None]).reshape(*lead, d).astype(dtype)
+    nb = scale.shape[-1]
+    if block is None:
+        if d % nb:
+            raise ValueError(
+                f"trailing dim {d} is ragged over {nb} scale blocks; "
+                f"pass the block= used to quantize"
+            )
+        block = d // nb
+    qp, _ = _pad_to_block(q, block)
+    xb = qp.reshape(*lead, nb, block).astype(jnp.float32) * scale[..., None]
+    return xb.reshape(*lead, nb * block)[..., :d].astype(dtype)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.api import ClusterSpec, DeploymentSpec, deploy, list_strategies
 from repro.cluster import NodeFailed
+from repro.dataplane import list_codecs
 from repro.configs import ARCHS, get_config, reduced
 from repro.core.model_zoo import demo_mlp
 from repro.models import lm
@@ -41,6 +42,8 @@ def serve_edge(
     serving: str = "pipelined",
     queue_depth: int = 2,
     replicas: int | str = 1,
+    codec: str | None = None,
+    tolerance: float | None = None,
 ) -> int:
     """Edge-cluster serving demo: deploy(spec) -> stream -> kill -> recover."""
     graph, executor_for_version = demo_mlp(d=width)
@@ -53,6 +56,8 @@ def serve_edge(
         partitioner=partitioner,
         placer=placer,
         joint=joint,
+        codec=codec,
+        accuracy_tolerance=tolerance,
         seed=seed,
         microbatch=4,
         serving=serving,
@@ -70,7 +75,8 @@ def serve_edge(
         obs = d.observed()
         print(f"edge serving [{names}, {serving}]: {len(obs.path)} partitions on "
               f"nodes {list(obs.path)}, bottleneck {obs.bottleneck_latency*1e3:.3f} ms, "
-              f"predicted {d.plan.predicted_throughput:.1f} microbatch/s")
+              f"predicted {d.plan.predicted_throughput:.1f} microbatch/s, "
+              f"link codecs {list(d.plan.codecs)}")
     for _ in range(requests):
         d.submit(jnp.ones((width,)) * 0.1)
     half = requests // 2
@@ -101,6 +107,14 @@ def serve_edge(
             print(f"  stage {st['stage']} on node {st['node']}: "
                   f"occupancy {st['occupancy']:.2f}, mean queue {st['mean_queue']:.2f}, "
                   f"max queue {st['max_queue']}, {st['microbatches']} microbatches")
+        for ln in m["serving"].get("links", ()):
+            if ln["raw_bytes"] <= 0:
+                continue  # colocated endpoints: nothing rides a wire
+            print(f"  link {ln['hop']}: codec {ln['codec']}, "
+                  f"{ln['raw_bytes']:.0f} -> {ln['wire_bytes']:.0f} B "
+                  f"({ln['compression_x']:.2f}x), "
+                  f"utilization {ln['utilization']:.2f}, "
+                  f"{ln['transfers']} transfers")
     return 0
 
 
@@ -137,6 +151,14 @@ def main() -> int:
     ap.add_argument("--replicas", default="1",
                     help="edge mode pipeline replica count: an int, or 'auto' "
                          "to maximize summed predicted throughput")
+    ap.add_argument("--codec", default=None,
+                    choices=(*list_codecs(), "auto"),
+                    help="edge mode inter-stage transfer codec; 'auto' picks "
+                         "the fastest codec per link within --tolerance "
+                         "(default: identity, the raw wire)")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="edge mode per-link accuracy tolerance (max codec "
+                         "round-trip error relative to max|x|)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -147,7 +169,7 @@ def main() -> int:
             partitioner=args.partitioner, placer=args.placer, joint=args.joint,
             capacity_frac=args.capacity_frac, width=args.width,
             serving=args.serving, queue_depth=args.queue_depth,
-            replicas=replicas,
+            replicas=replicas, codec=args.codec, tolerance=args.tolerance,
         )
     if not args.arch:
         ap.error("--arch is required unless --edge is given")

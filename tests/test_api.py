@@ -88,6 +88,25 @@ def test_unknown_strategy_raises_with_suggestions():
         get_strategy("scheduler", "foo")
 
 
+def test_unknown_codec_raises_with_suggestions():
+    """The codec registry mirrors the strategy registry's ergonomics: a typo
+    fails with did-you-mean suggestions, and a spec naming it surfaces the
+    same message as a structured issue instead of deploying."""
+    from repro.dataplane import UnknownCodecError, get_codec, list_codecs
+
+    with pytest.raises(UnknownCodecError) as ei:
+        get_codec("identty")
+    assert "identity" in str(ei.value)  # did-you-mean
+    assert "int8" in str(ei.value)  # registered names listed
+    assert list_codecs()[0] == "identity"  # default first
+
+    issues = _demo_spec(codec="identty").validate()
+    assert [i.code for i in issues] == ["unknown_codec"]
+    assert "identity" in issues[0].message
+    with pytest.raises(InfeasibleSpecError, match="unknown_codec"):
+        deploy(_demo_spec(codec="identty"))
+
+
 def test_duplicate_registration_rejected():
     with pytest.raises(ValueError, match="duplicate"):
         register_strategy("placer", "color_coding")(lambda: None)

@@ -83,14 +83,36 @@ def test_replica_scaling_benchmark_emits_a_valid_canonical_artifact(
     assert "replicated" in router
 
 
+def test_bandwidth_sweep_benchmark_emits_a_valid_canonical_artifact(
+        tmp_path, monkeypatch):
+    """End to end: the codec bandwidth sweep writes one schema-valid BENCH_
+    artifact whose claims pin the data plane's acceptance criteria -- int8
+    >= identity and auto >= 1.5x identity on the constrained mesh, and the
+    engine within 5% of the plan's prediction for every codec."""
+    from benchmarks import bandwidth_sweep
+
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path)
+    bandwidth_sweep.run(requests=16)
+    (path,) = tmp_path.iterdir()
+    assert path.name == f"{ARTIFACT_PREFIX}bandwidth_sweep.json"
+    payload = json.loads(path.read_text())
+    validate_payload(path.stem, payload)
+    codecs = {r["codec"] for r in payload["rows"]}
+    assert codecs >= {"identity", "int8", "topk-sparse", "auto"}
+    assert payload["claims"]["int8_vs_identity_at_min_bw"] >= 1.0
+    assert payload["claims"]["auto_vs_identity_at_min_bw"] >= 1.5
+    assert 0.95 <= payload["claims"]["worst_vs_predicted"]
+    assert payload["claims"]["best_vs_predicted"] <= 1.05
+
+
 def test_every_benchmark_declares_its_artifact_name():
     """run.py (and the CI upload step) resolve artifact paths through each
     module's ARTIFACT constant -- the single source of the basename."""
     import importlib
 
-    for mod in ("algo_scaling", "approx_ratio", "churn_throughput",
-                "fig3_bottleneck", "joint_opt", "kernel_bench",
-                "replica_scaling", "throughput_scaling"):
+    for mod in ("algo_scaling", "approx_ratio", "bandwidth_sweep",
+                "churn_throughput", "fig3_bottleneck", "joint_opt",
+                "kernel_bench", "replica_scaling", "throughput_scaling"):
         m = importlib.import_module(f"benchmarks.{mod}")
         assert isinstance(m.ARTIFACT, str) and m.ARTIFACT, mod
 

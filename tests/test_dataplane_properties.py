@@ -1,0 +1,101 @@
+"""Property suite for the joint codec x placement planner (hypothesis shim).
+
+Two guarantees the data plane's timing model was *designed* to make provable,
+checked over every registered partitioner and every registered codec (plus
+``"auto"``) on randomized link-bound clusters:
+
+  * **bandwidth monotonicity** -- scaling every link bandwidth up never
+    decreases ``Plan.predicted_throughput``: each hop's charged window
+    (``encode + wire/bw + decode``) is non-increasing in bandwidth, stage
+    computes are bandwidth-independent, and ``auto`` takes a per-hop min of
+    non-increasing functions;
+  * **auto never loses** -- enabling ``codec="auto"`` never predicts worse
+    than ``identity`` (or any fixed codec): every fixed assignment is in
+    auto's per-hop candidate set, and hop charges are independent, so the
+    per-hop argmin dominates every uniform choice.
+
+Runs through ``tests/_hypothesis_compat.py`` -- hypothesis itself is not
+installed here, so the deterministic fallback replays a fixed sample.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.api import Planner, list_strategies
+from repro.core.model_zoo import demo_mlp
+from repro.core.placement import CommGraph
+from repro.dataplane import list_codecs
+
+FLOPS = 1e9  # per node: codec compute participates in every charge
+
+
+def _mesh(hosting: int, mesh_bw: float, rng: np.random.Generator) -> CommGraph:
+    """Link-bound star+mesh with mild per-link jitter (still symmetric)."""
+    n = hosting + 1
+    jitter = rng.uniform(0.6, 1.4, size=(n, n))
+    jitter = np.tril(jitter) + np.tril(jitter, -1).T
+    bw = np.full((n, n), float(mesh_bw)) * jitter
+    bw[0, :] = bw[:, 0] = 1e9
+    np.fill_diagonal(bw, 0.0)
+    graph, _ = demo_mlp()
+    # 0.4 * total leaves packing slack so EVERY registered partitioner
+    # (incl. paper_greedy's first-fit) finds a feasible multi-part split
+    cap = np.full(n, 0.4 * graph.total_param_bytes)
+    cap[0] = -1.0
+    return CommGraph(bw=bw, node_capacity=cap)
+
+
+def _throughput(partitioner: str, codec: str, comm: CommGraph) -> float:
+    graph, _ = demo_mlp()
+    planner = Planner(partitioner=partitioner, placer="greedy", codec=codec)
+    plan = planner.plan(
+        graph, comm, capacity=float(np.max(comm.node_capacity)),
+        max_parts=comm.n, dispatcher=0, device_flops=FLOPS,
+    )
+    assert plan.feasible, (partitioner, codec)
+    return plan.predicted_throughput
+
+
+@pytest.mark.parametrize("partitioner", list_strategies("partitioner"))
+def test_predicted_throughput_monotone_in_bandwidth(partitioner):
+    """For every partitioner x codec pair: uniformly faster links never
+    predict lower throughput."""
+
+    @given(
+        bw_exp=st.integers(3, 7),
+        factor=st.integers(2, 16),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=6, deadline=None)
+    def check(bw_exp, factor, seed):
+        rng = np.random.default_rng(seed)
+        hosting = int(rng.integers(6, 9))
+        lo = _mesh(hosting, 10.0 ** bw_exp, np.random.default_rng(seed))
+        hi = CommGraph(bw=lo.bw * factor,
+                       node_capacity=lo.node_capacity.copy())
+        for codec in (*list_codecs(), "auto"):
+            tp_lo = _throughput(partitioner, codec, lo)
+            tp_hi = _throughput(partitioner, codec, hi)
+            assert tp_hi >= tp_lo * (1 - 1e-9), (codec, tp_lo, tp_hi)
+
+    check()
+
+
+@pytest.mark.parametrize("partitioner", list_strategies("partitioner"))
+def test_auto_never_predicts_worse_than_any_fixed_codec(partitioner):
+    """Enabling codec="auto" never decreases predicted throughput relative
+    to identity -- or to any other registered fixed codec."""
+
+    @given(bw_exp=st.integers(3, 7), seed=st.integers(0, 2**16))
+    @settings(max_examples=6, deadline=None)
+    def check(bw_exp, seed):
+        rng = np.random.default_rng(seed)
+        hosting = int(rng.integers(6, 9))
+        comm = _mesh(hosting, 10.0 ** bw_exp, np.random.default_rng(seed))
+        tp_auto = _throughput(partitioner, "auto", comm)
+        for codec in list_codecs():
+            tp_fixed = _throughput(partitioner, codec, comm)
+            assert tp_auto >= tp_fixed * (1 - 1e-9), (codec, tp_fixed, tp_auto)
+
+    check()

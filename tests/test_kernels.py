@@ -98,6 +98,71 @@ def test_quantize_roundtrip_bounded(rows, dblocks, seed):
     assert np.all(np.abs(np.asarray(y - x)) <= bound)
 
 
+QUANT_SWEEP = [
+    # (rows, d, block, dtype) -- incl. ragged last blocks (d % block != 0)
+    (4, 512, 128, jnp.float32),
+    (4, 512, 128, jnp.bfloat16),
+    (3, 300, 128, jnp.float32),  # ragged: last block 44 wide
+    (3, 300, 128, jnp.bfloat16),
+    (2, 37, 256, jnp.float32),  # ragged: d < block entirely
+    (1, 129, 128, jnp.bfloat16),  # ragged: one element past the boundary
+]
+
+
+@pytest.mark.parametrize("case", QUANT_SWEEP)
+def test_quantize_error_bound_matches_reported(case):
+    """Round-trip error <= INT8_MAX_REL_ERROR * per-block max -- the SAME
+    constant the data plane's int8 codec reports to the planner's
+    accuracy_tolerance check, across dtypes and ragged last-block shapes."""
+    from repro.kernels.quantize import INT8_MAX_REL_ERROR
+
+    rows, d, block, dtype = case
+    x = jax.random.normal(jax.random.PRNGKey(rows * d), (rows, d), dtype)
+    q, s = quantize_ref(x, block)
+    assert q.shape == x.shape and s.shape == (rows, -(-d // block))
+    y = dequantize_ref(q, s, dtype=jnp.float32, block=block)
+    xf = np.asarray(x, np.float32)
+    # per-element bound: rel error wrt the element's own block max (small
+    # f32 rounding slack, as in the scale/2 bound above)
+    per_block_max = np.repeat(np.asarray(s) * 127.0, block, axis=-1)[:, :d]
+    bound = INT8_MAX_REL_ERROR * per_block_max * (1 + 1e-4) + 1e-9
+    assert np.all(np.abs(np.asarray(y) - xf) <= bound)
+    # the data plane reports exactly this constant as the codec error bound
+    from repro.dataplane import get_codec
+
+    assert get_codec("int8").error_bound == INT8_MAX_REL_ERROR
+
+
+@pytest.mark.parametrize("case", QUANT_SWEEP)
+def test_quantize_pallas_interpret_matches_ref_sweep(case):
+    """The Pallas kernel (interpret mode) agrees with the jnp oracle on the
+    same dtype/ragged sweep: identical codes, identical scales."""
+    rows, d, block, dtype = case
+    x = jax.random.normal(jax.random.PRNGKey(7 + rows + d), (rows, d), dtype)
+    q1, s1 = quantize_ref(x, block)
+    q2, s2 = quantize_int8_tpu(x, block=block, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    y1 = dequantize_ref(q1, s1, dtype=jnp.float32, block=block)
+    y2 = dequantize_int8_tpu(q2, s2, dtype=jnp.float32, block=block,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_dequantize_ragged_requires_block():
+    """When the trailing dim does not divide the scale count, no block can
+    be inferred -- refuse instead of silently misassigning scales.  (An
+    evenly-dividing ragged shape is indistinguishable from a smaller-block
+    legacy layout, which is why every codec caller passes block= always.)"""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 301), jnp.float32)
+    q, s = quantize_ref(x, 128)
+    assert s.shape[-1] == 3  # ragged: 301 over 128-wide blocks
+    with pytest.raises(ValueError, match="ragged"):
+        dequantize_ref(q, s)
+    assert dequantize_ref(q, s, block=128).shape == x.shape
+
+
 def test_quantize_pallas_matches_ref():
     x = jax.random.normal(jax.random.PRNGKey(0), (3, 64, 512), jnp.bfloat16)
     q1, s1 = quantize_ref(x, 128)
