@@ -7,6 +7,10 @@ Each benchmark module persists its payload as ``results/BENCH_<name>.json``
 the perf trajectory is diffable across PRs instead of living only in CI
 logs.  The driver just sequences the modules and reports where the
 artifacts landed.
+
+``bench_registry()`` exposes the name -> (module, runner) table so tests can
+assert every artifact-producing module under ``benchmarks/`` is wired in
+(a benchmark that exists but never runs is a silent coverage hole).
 """
 
 from __future__ import annotations
@@ -18,12 +22,8 @@ import time
 from benchmarks.common import ARTIFACT_PREFIX, RESULTS_DIR
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true", help="fewer trials")
-    ap.add_argument("--only", default=None, help="run a single benchmark")
-    args = ap.parse_args()
-
+def bench_registry(fast: bool = False) -> dict:
+    """name -> (module, runner); each module's ARTIFACT names its payload."""
     from benchmarks import (
         algo_scaling,
         approx_ratio,
@@ -32,31 +32,43 @@ def main() -> int:
         fig3_bottleneck,
         joint_opt,
         kernel_bench,
+        latency_pareto,
         replica_scaling,
         throughput_scaling,
     )
 
-    trials_fig3 = 4 if args.fast else 12
-    trials = 6 if args.fast else 16
-    benches = {
-        # name -> (module, runner); each module's ARTIFACT names its payload
+    trials_fig3 = 4 if fast else 12
+    trials = 6 if fast else 16
+    return {
         "fig3": (fig3_bottleneck, lambda: fig3_bottleneck.run(trials=trials_fig3)),
         "throughput": (throughput_scaling,
                        lambda: throughput_scaling.run(
-                           requests=32 if args.fast else 96)),
+                           requests=32 if fast else 96)),
         "approx_ratio": (approx_ratio, lambda: approx_ratio.run(trials=max(trials, 8))),
         "joint_opt": (joint_opt, lambda: joint_opt.run(trials=trials)),
         "algo_scaling": (algo_scaling, algo_scaling.run),
         "kernels": (kernel_bench, kernel_bench.run),
         "churn": (churn_throughput,
-                  lambda: churn_throughput.run(per_phase=8 if args.fast else 40)),
+                  lambda: churn_throughput.run(per_phase=8 if fast else 40)),
         "replicas": (replica_scaling,
                      lambda: replica_scaling.run(
-                         requests=24 if args.fast else 60)),
+                         requests=24 if fast else 60)),
         "bandwidth": (bandwidth_sweep,
                       lambda: bandwidth_sweep.run(
-                          requests=24 if args.fast else 48)),
+                          requests=24 if fast else 48)),
+        "latency": (latency_pareto,
+                    lambda: latency_pareto.run(
+                        duration_s=1.0 if fast else 2.0)),
     }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="fewer trials")
+    ap.add_argument("--only", default=None, help="run a single benchmark")
+    args = ap.parse_args()
+
+    benches = bench_registry(fast=args.fast)
     failures = []
     for name, (module, fn) in benches.items():
         if args.only and name != args.only:

@@ -39,9 +39,12 @@ from repro.api.registry import (
 )
 
 _LAZY = {
+    "ArrivalSpec": "repro.api.spec",
+    "AutoscaleSpec": "repro.api.spec",
     "ClusterSpec": "repro.api.spec",
     "DeploymentSpec": "repro.api.spec",
     "InfeasibleSpecError": "repro.api.spec",
+    "SLOClass": "repro.api.spec",
     "SpecIssue": "repro.api.spec",
     "Plan": "repro.api.planner",
     "Planner": "repro.api.planner",

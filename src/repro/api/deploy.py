@@ -64,6 +64,11 @@ def deploy(
         spec.executor_for_version or model_executor or
         (lambda v: _passthrough_executor)
     )
+    if spec.autoscale is not None:
+        return _deploy_autoscaled(
+            spec, graph, comm, positions, executor_for_version,
+            store_root=store_root, version=version, flops_per_s=flops_per_s,
+        )
     rplan = None
     if spec.replicas != 1:
         # split the cluster BEFORE any probing: groups are decided on the
@@ -122,6 +127,79 @@ def deploy(
     return dep
 
 
+def _deploy_autoscaled(
+    spec: DeploymentSpec,
+    graph,
+    comm,
+    positions,
+    executor_for_version,
+    *,
+    store_root: str | None,
+    version: int,
+    flops_per_s: float,
+) -> "Deployment":
+    """Autoscaling path: plan the widest feasible replica split, activate
+    ``min_replicas`` groups, park the rest as the autoscaler's standby pool."""
+    from repro.cluster.autoscale import Autoscaler
+
+    auto = spec.autoscale
+    plan_width = "max" if auto.max_replicas == "auto" else auto.max_replicas
+    rplan = Planner.from_spec(spec).plan_replicated(
+        graph, comm,
+        replicas=plan_width, capacity=spec.capacity, version=version,
+        dispatcher=0, device_flops=flops_per_s,
+        compression_ratio=spec.compression_ratio,
+    )
+    if not rplan.feasible or rplan.n_replicas < auto.min_replicas:
+        raise InfeasibleSpecError((SpecIssue(
+            "infeasible_replicas",
+            f"autoscaling needs at least {auto.min_replicas} feasible replica "
+            f"group(s) (max_replicas={auto.max_replicas!r}) but the planner "
+            f"found {rplan.n_replicas if rplan.feasible else 0} on this cluster",
+        ),))
+    cluster = EdgeCluster(comm, flops_per_s=flops_per_s)
+    store = ArtifactStore(
+        store_root if store_root is not None
+        else tempfile.mkdtemp(prefix="seifer-deploy-")
+    )
+
+    def make_control(group, r: int) -> ControlPlane:
+        # one control plane per replica slot; r indexes the *router's*
+        # append-only replica list so regrown slots get fresh noise streams
+        control = ControlPlane(
+            cluster, store,
+            lambda v: graph, executor_for_version,
+            planner=Planner.from_spec(spec),
+            capacity=spec.capacity,
+            compression_ratio=spec.compression_ratio,
+            seed=spec.seed + 7919 * r,
+            allowed_nodes=set(group) | {0},
+            hosting_nodes=set(group),
+        )
+        control.bootstrap(max(version, store.current_version()))
+        return control
+
+    active = [tuple(g) for g in rplan.groups[:auto.min_replicas]]
+    standby = [tuple(g) for g in rplan.groups[auto.min_replicas:]]
+    controls = [make_control(g, r) for r, g in enumerate(active)]
+    replicaset = ReplicaSet(
+        cluster, controls, [set(g) for g in active], dispatcher_node=0,
+    )
+    dep = Deployment(spec, replicaset=replicaset, positions=positions)
+    max_replicas = (
+        None if auto.max_replicas == "auto" else int(auto.max_replicas))
+    dep.autoscaler = Autoscaler(
+        make_control, standby,
+        min_replicas=auto.min_replicas, max_replicas=max_replicas,
+        backlog_high=auto.backlog_high, backlog_low=auto.backlog_low,
+        target_p99_s=auto.target_p99_s, cooldown_s=auto.cooldown_s,
+        window=auto.window,
+    )
+    dep.loop.autoscaler = dep.autoscaler
+    dep._check_slos()
+    return dep
+
+
 class Deployment:
     """A live deployment: serving loop + control plane + strategy registry.
 
@@ -141,6 +219,7 @@ class Deployment:
             raise ValueError("give exactly one of control= or replicaset=")
         self.spec = spec
         self.replicaset = replicaset
+        self.autoscaler = None  # set by deploy() when spec.autoscale is given
         if replicaset is not None:
             # replica 0 as the representative for shared resources
             # (cluster/store are one object across every replica)
@@ -148,6 +227,10 @@ class Deployment:
             self.loop = ReplicatedServingLoop(
                 replicaset, microbatch=spec.microbatch,
                 queue_depth=spec.queue_depth,
+                max_batch=spec.max_batch,
+                admission_depth=spec.admission_depth,
+                class_priority=spec.class_priority(),
+                class_targets=spec.class_targets(),
             )
         else:
             self.control = control
@@ -157,6 +240,10 @@ class Deployment:
                 self.loop = PipelinedServingLoop(
                     control, microbatch=spec.microbatch,
                     queue_depth=spec.queue_depth,
+                    max_batch=spec.max_batch,
+                    admission_depth=spec.admission_depth,
+                    class_priority=spec.class_priority(),
+                    class_targets=spec.class_targets(),
                 )
         self.watcher = ModelWatcher(self.control.store)
         self.positions = positions  # node positions for random clusters (growth)
@@ -200,9 +287,43 @@ class Deployment:
         return self.replicaset.observed()
 
     # -- serving -------------------------------------------------------------
-    def submit(self, x: Any) -> Request:
+    def submit(self, x: Any, *, slo_class: str | None = None) -> Request:
         """Admit one inference request."""
-        return self.loop.submit(x)
+        if self.spec.serving == "sync":
+            return self.loop.submit(x)
+        return self.loop.submit(x, slo_class=slo_class)
+
+    def schedule(
+        self, x: Any, at_s: float, *, slo_class: str | None = None,
+    ) -> Request:
+        """Register one open-loop arrival at virtual time ``at_s``."""
+        if self.spec.serving == "sync":
+            raise RuntimeError("open-loop arrivals need pipelined serving")
+        return self.loop.schedule(x, at_s, slo_class=slo_class)
+
+    def submit_trace(self, trace=None, make_input=None) -> int:
+        """Schedule every arrival of an open-loop trace onto the engine.
+
+        With no ``trace`` argument, generates one from ``spec.arrival``
+        (trace name, rate, duration, seed) and the spec's SLO class weights.
+        ``make_input(i, arrival)`` builds each request payload; the default
+        sends the arrival index.  Returns the number of arrivals scheduled.
+        """
+        if trace is None:
+            arr = self.spec.arrival
+            if arr is None:
+                raise RuntimeError("spec has no arrival process; pass a trace")
+            from repro.workload import make_trace
+
+            trace = make_trace(
+                arr.trace, rate=arr.rate, duration_s=arr.duration_s,
+                seed=arr.seed, classes=self.spec.slo_classes,
+            )
+        if make_input is None:
+            make_input = lambda i, a: i  # noqa: E731
+        from repro.workload import schedule_trace
+
+        return schedule_trace(self, trace, make_input)
 
     def step(self) -> list[Request]:
         """One admission round (reconciles pending events first)."""

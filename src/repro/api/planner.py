@@ -483,8 +483,11 @@ class Planner:
         maximizing the summed predicted throughput (the depth-vs-width
         trade-off: more replicas means shallower per-replica clusters, so
         past some R a group can no longer host the model and the sum stops
-        growing).  An explicit R returns that plan even when infeasible, so
-        callers can surface *why*; ``"auto"`` returns the best feasible
+        growing).  ``replicas="max"`` keeps the *widest* feasible split
+        instead -- the autoscaler's planning mode, where every group is a
+        unit of standby capacity and headroom beats day-one throughput.
+        An explicit R returns that plan even when infeasible, so callers
+        can surface *why*; ``"auto"``/``"max"`` return the best feasible
         candidate (falling back to the R=1 attempt when none is).
         """
         hosting = [
@@ -493,6 +496,9 @@ class Planner:
         ]
         if replicas == "auto":
             candidates = range(1, max(1, len(hosting)) + 1)
+        elif replicas == "max":
+            # widest first: the first feasible candidate wins outright
+            candidates = range(max(1, len(hosting)), 0, -1)
         else:
             candidates = [int(replicas)]
         def group_capacity(group) -> float:
@@ -513,7 +519,7 @@ class Planner:
                 # more groups than hosting nodes: infeasible, not a crash --
                 # deploy() surfaces it as a structured InfeasibleSpecError
                 continue
-            if replicas == "auto" and any(
+            if replicas in ("auto", "max") and any(
                 group_capacity(g) < graph.total_param_bytes for g in groups
             ):
                 continue  # cheap prune: some group cannot hold the model
@@ -539,6 +545,8 @@ class Planner:
                 fallback = cand
             if not cand.feasible:
                 continue
+            if replicas == "max":
+                return cand  # widest feasible split, by candidate order
             if best is None or cand.predicted_throughput > best.predicted_throughput:
                 best = cand
         if best is not None:

@@ -92,6 +92,134 @@ class ClusterSpec:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One request latency class.
+
+    ``priority`` orders continuous-batch admission (higher drains first);
+    ``target_latency_s`` is the class's admit-to-complete target, reported
+    as attainment in the latency metrics (``None`` = best-effort);
+    ``weight`` is the class's share of generated trace traffic.
+    """
+
+    name: str
+    priority: int = 0
+    target_latency_s: float | None = None
+    weight: float = 1.0
+
+    def validate(self) -> tuple[SpecIssue, ...]:
+        issues = []
+        if not self.name or not isinstance(self.name, str):
+            issues.append(SpecIssue(
+                "bad_slo_class", f"SLO class name must be a non-empty "
+                                 f"string, got {self.name!r}"))
+        if self.target_latency_s is not None and self.target_latency_s <= 0:
+            issues.append(SpecIssue(
+                "bad_slo_class",
+                f"SLO class {self.name!r}: target_latency_s must be > 0, "
+                f"got {self.target_latency_s!r}"))
+        if self.weight <= 0:
+            issues.append(SpecIssue(
+                "bad_slo_class",
+                f"SLO class {self.name!r}: weight must be > 0, "
+                f"got {self.weight!r}"))
+        return tuple(issues)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    """Open-loop offered load: a seeded trace of request arrival times.
+
+    ``trace`` is a registered generator name (``repro.workload``:
+    ``poisson`` / ``diurnal`` / ``bursty`` / ``heavy-tailed``); ``rate`` is
+    the mean arrivals/s on the virtual clock over ``duration_s``.  The
+    trace seed is separate from the planning seed so load and placement
+    randomness vary independently.
+    """
+
+    trace: str = "poisson"
+    rate: float = 100.0
+    duration_s: float = 10.0
+    seed: int = 0
+
+    def validate(self) -> tuple[SpecIssue, ...]:
+        from repro.workload import UnknownTraceError, get_trace_generator
+
+        issues = []
+        try:
+            get_trace_generator(self.trace)
+        except UnknownTraceError as e:
+            issues.append(SpecIssue("unknown_trace", str(e.args[0])))
+        if self.rate <= 0:
+            issues.append(SpecIssue(
+                "bad_arrival", f"rate must be > 0 arrivals/s, got {self.rate!r}"))
+        if self.duration_s <= 0:
+            issues.append(SpecIssue(
+                "bad_arrival", f"duration_s must be > 0, got {self.duration_s!r}"))
+        return tuple(issues)
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscaleSpec:
+    """Load-driven replica scaling policy (``cluster.autoscale.Autoscaler``).
+
+    ``deploy()`` plans the widest feasible replica split, activates
+    ``min_replicas`` groups, and parks the rest as standby capacity the
+    autoscaler grows into when per-replica backlog crosses ``backlog_high``
+    (or recent p99 drifts past ``target_p99_s``) and shrinks out of below
+    ``backlog_low``.  ``max_replicas="auto"`` means every plannable group.
+    """
+
+    min_replicas: int = 1
+    max_replicas: int | str = "auto"
+    backlog_high: float = 16.0
+    backlog_low: float = 2.0
+    target_p99_s: float | None = None
+    cooldown_s: float = 0.5
+    window: int = 32
+
+    def validate(self) -> tuple[SpecIssue, ...]:
+        issues = []
+        if not isinstance(self.min_replicas, int) or self.min_replicas < 1:
+            issues.append(SpecIssue(
+                "bad_autoscale",
+                f"min_replicas must be an int >= 1, got {self.min_replicas!r}"))
+        if self.max_replicas != "auto" and not (
+            isinstance(self.max_replicas, int)
+            and not isinstance(self.max_replicas, bool)
+            and self.max_replicas >= 1
+        ):
+            issues.append(SpecIssue(
+                "bad_autoscale",
+                f"max_replicas must be an int >= 1 or 'auto', "
+                f"got {self.max_replicas!r}"))
+        elif (isinstance(self.max_replicas, int)
+              and isinstance(self.min_replicas, int)
+              and self.max_replicas < self.min_replicas):
+            issues.append(SpecIssue(
+                "bad_autoscale",
+                f"max_replicas ({self.max_replicas}) < min_replicas "
+                f"({self.min_replicas})"))
+        if self.backlog_low >= self.backlog_high:
+            issues.append(SpecIssue(
+                "bad_autoscale",
+                f"backlog_low ({self.backlog_low!r}) must be below "
+                f"backlog_high ({self.backlog_high!r}) or scaling oscillates"))
+        if self.target_p99_s is not None and self.target_p99_s <= 0:
+            issues.append(SpecIssue(
+                "bad_autoscale",
+                f"target_p99_s must be > 0, got {self.target_p99_s!r}"))
+        if self.cooldown_s < 0:
+            issues.append(SpecIssue(
+                "bad_autoscale",
+                f"cooldown_s must be >= 0, got {self.cooldown_s!r}"))
+        if not isinstance(self.window, int) or self.window < 1:
+            issues.append(SpecIssue(
+                "bad_autoscale",
+                f"window must be an int >= 1, got {self.window!r}"))
+        return tuple(issues)
+
+
 def _resolve_model(model) -> tuple[LayerGraph, Callable | None]:
     """model field -> (graph, executor_for_version | None).
 
@@ -170,6 +298,26 @@ class DeploymentSpec:
         behind a cluster-wide router; ``"auto"`` picks the R maximizing the
         summed predicted throughput.  Replicated serving always uses the
         pipelined engine.
+    max_batch:
+        continuous batching: coalesce up to this many queued requests into
+        one microbatch per admission (pipelined engine only).  ``None``
+        keeps the fixed ``microbatch`` admission target.
+    admission_depth:
+        open-loop admission bound: arrivals past this queue depth are
+        rejected (load shedding) instead of queueing without bound.
+        ``None`` = unbounded (the closed-loop default).
+    slo_classes:
+        request latency classes (``SLOClass``): batch-admission priority,
+        per-class latency targets (reported as attainment), and trace
+        traffic weights.
+    arrival:
+        open-loop offered load (``ArrivalSpec``): a seeded arrival-time
+        trace served by timestamp on the virtual clock.  ``None`` keeps
+        closed-loop ``submit()`` serving.
+    autoscale:
+        load-driven replica scaling (``AutoscaleSpec``): grow/retire
+        replicas from observed backlog + p99 drift.  Mutually exclusive
+        with an explicit ``replicas`` count (the autoscaler owns R).
     """
 
     model: Any
@@ -190,10 +338,26 @@ class DeploymentSpec:
     serving: str = "pipelined"
     queue_depth: int = 2
     replicas: int | str = 1
+    max_batch: int | None = None
+    admission_depth: int | None = None
+    slo_classes: tuple[SLOClass, ...] | None = None
+    arrival: ArrivalSpec | None = None
+    autoscale: AutoscaleSpec | None = None
 
     def __post_init__(self) -> None:
         if isinstance(self.cluster, CommGraph):
             object.__setattr__(self, "cluster", ClusterSpec(comm=self.cluster))
+        if isinstance(self.slo_classes, (list, tuple)):
+            object.__setattr__(self, "slo_classes", tuple(self.slo_classes))
+        if self.autoscale is True:  # shorthand: default policy
+            object.__setattr__(self, "autoscale", AutoscaleSpec())
+
+    # -- SLO-class views ------------------------------------------------------
+    def class_priority(self) -> dict[str, int]:
+        return {c.name: c.priority for c in (self.slo_classes or ())}
+
+    def class_targets(self) -> dict[str, float | None]:
+        return {c.name: c.target_latency_s for c in (self.slo_classes or ())}
 
     # -- resolution ----------------------------------------------------------
     def resolve_model(self) -> tuple[LayerGraph, Callable | None]:
@@ -296,6 +460,78 @@ class DeploymentSpec:
         if self.queue_depth < 1:
             issues.append(SpecIssue("bad_serving", "queue_depth must be >= 1"))
 
+        # heavy-traffic serving knobs
+        if self.max_batch is not None and (
+            not isinstance(self.max_batch, int)
+            or isinstance(self.max_batch, bool) or self.max_batch < 1
+        ):
+            issues.append(SpecIssue(
+                "bad_batching",
+                f"max_batch must be an int >= 1 or None, got {self.max_batch!r}",
+            ))
+        if self.admission_depth is not None and (
+            not isinstance(self.admission_depth, int)
+            or isinstance(self.admission_depth, bool)
+            or self.admission_depth < 1
+        ):
+            issues.append(SpecIssue(
+                "bad_batching",
+                f"admission_depth must be an int >= 1 or None, "
+                f"got {self.admission_depth!r}",
+            ))
+        if self.slo_classes is not None:
+            seen = set()
+            for c in self.slo_classes:
+                if not isinstance(c, SLOClass):
+                    issues.append(SpecIssue(
+                        "bad_slo_class",
+                        f"slo_classes entries must be SLOClass, "
+                        f"got {type(c).__name__}",
+                    ))
+                    continue
+                issues.extend(c.validate())
+                if c.name in seen:
+                    issues.append(SpecIssue(
+                        "bad_slo_class", f"duplicate SLO class {c.name!r}"))
+                seen.add(c.name)
+        if self.arrival is not None:
+            if not isinstance(self.arrival, ArrivalSpec):
+                issues.append(SpecIssue(
+                    "bad_arrival",
+                    f"arrival must be an ArrivalSpec, "
+                    f"got {type(self.arrival).__name__}",
+                ))
+            else:
+                issues.extend(self.arrival.validate())
+            if self.serving == "sync":
+                issues.append(SpecIssue(
+                    "bad_serving",
+                    "open-loop arrivals serve through the pipelined engine "
+                    "(timestamped admission); serving='sync' is closed-loop",
+                ))
+        if self.autoscale is not None:
+            if not isinstance(self.autoscale, AutoscaleSpec):
+                issues.append(SpecIssue(
+                    "bad_autoscale",
+                    f"autoscale must be an AutoscaleSpec (or True), "
+                    f"got {type(self.autoscale).__name__}",
+                ))
+            else:
+                issues.extend(self.autoscale.validate())
+            if self.serving == "sync":
+                issues.append(SpecIssue(
+                    "bad_autoscale",
+                    "autoscaling serves through the replicated pipelined "
+                    "engine; serving='sync' supports only a fixed pipeline",
+                ))
+            if self.replicas != 1:
+                issues.append(SpecIssue(
+                    "bad_autoscale",
+                    f"replicas={self.replicas!r} and autoscale= both given; "
+                    f"the autoscaler owns the replica count (set "
+                    f"min_replicas/max_replicas on the AutoscaleSpec)",
+                ))
+
         if not (
             self.replicas == "auto"
             or (isinstance(self.replicas, int)
@@ -346,6 +582,19 @@ class DeploymentSpec:
                         f"replicas={self.replicas} exceeds the {hosting} "
                         f"hosting node(s) (node 0 is the shared dispatcher) "
                         f"-- the cluster cannot be split that wide",
+                    ))
+            if (isinstance(self.autoscale, AutoscaleSpec)
+                    and isinstance(self.autoscale.min_replicas, int)):
+                hosting = sum(
+                    1 for i, c in enumerate(comm.node_capacity)
+                    if c > 0 and i != 0
+                )
+                if self.autoscale.min_replicas > hosting:
+                    issues.append(SpecIssue(
+                        "infeasible_replicas",
+                        f"autoscale.min_replicas={self.autoscale.min_replicas} "
+                        f"exceeds the {hosting} hosting node(s) -- the cluster "
+                        f"cannot host that many replica groups",
                     ))
 
         return tuple(issues)

@@ -1,3 +1,4 @@
+from repro.cluster.autoscale import Autoscaler, ScaleEvent
 from repro.cluster.controlplane import (
     ControlPlane,
     DesiredState,
@@ -20,12 +21,18 @@ from repro.cluster.engine import (
     StageState,
 )
 from repro.cluster.lifecycle import EdgeCluster, InferencePipeline, Node, Pod
-from repro.cluster.serving import Request, ServingLoop
+from repro.cluster.serving import (
+    Request,
+    ServingLoop,
+    latency_report,
+    latency_stats,
+)
 from repro.cluster.store import ArtifactStore
 from repro.cluster.watch import ModelWatcher
 
 __all__ = [
     "ArtifactStore",
+    "Autoscaler",
     "ClusterEvent",
     "ControlPlane",
     "DeploymentPlan",
@@ -46,7 +53,10 @@ __all__ = [
     "ReplicaSet",
     "ReplicatedServingLoop",
     "Request",
+    "ScaleEvent",
     "ServingLoop",
     "StageState",
     "VersionBumped",
+    "latency_report",
+    "latency_stats",
 ]

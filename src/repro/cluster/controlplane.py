@@ -618,6 +618,16 @@ class ReplicaSet:
         self.advance_rollout()
         return actions
 
+    def add_replica(self, control: ControlPlane, group: Sequence[int]) -> int:
+        """Append a freshly-bootstrapped replica over ``group`` (the
+        autoscaler's grow path).  Replica indices are append-only -- retired
+        slots keep their history -- so routers indexing by replica id stay
+        consistent across grow/retire cycles."""
+        self.controls.append(control)
+        self.groups.append(set(group))
+        self.retired.append(False)
+        return len(self.controls) - 1
+
     def mark_retired(self, r: int, reason: str = "") -> None:
         if self.retired[r]:
             return

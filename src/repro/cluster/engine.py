@@ -40,6 +40,7 @@ pipelined engine with one spec field.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from collections import deque
 from typing import Any
 
@@ -48,7 +49,7 @@ import jax.numpy as jnp
 from repro.cluster.controlplane import ControlPlane, ReconcileAction, ReplicaSet
 from repro.cluster.events import NodeFailed
 from repro.cluster.lifecycle import Pod
-from repro.cluster.serving import Request
+from repro.cluster.serving import Request, latency_report
 from repro.core.bottleneck import service_times
 
 _ALL = "all"  # sentinel: every stage is affected (version bump, restart)
@@ -108,17 +109,38 @@ class PipelinedServingLoop:
         queue_depth: int = 2,
         max_attempts: int = 5,
         recovery_penalty_s: float = 0.25,
+        max_batch: int | None = None,
+        admission_depth: int | None = None,
+        class_priority: dict[str, int] | None = None,
+        class_targets: dict[str, float | None] | None = None,
     ):
         if queue_depth < 1:
             raise ValueError("queue_depth must be >= 1")
+        if max_batch is not None and max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if admission_depth is not None and admission_depth < 1:
+            raise ValueError("admission_depth must be >= 1")
         self.control = control
         self.microbatch = int(microbatch)
         self.queue_depth = int(queue_depth)
         self.max_attempts = int(max_attempts)
         self.recovery_penalty_s = float(recovery_penalty_s)
+        # continuous batching: coalesce up to max_batch queued requests per
+        # admission (None keeps the fixed microbatch target of closed loops)
+        self.max_batch = None if max_batch is None else int(max_batch)
+        # open-loop admission bound: arrivals beyond this queue depth are
+        # rejected (load shedding), never silently dropped
+        self.admission_depth = (
+            None if admission_depth is None else int(admission_depth))
+        self.class_priority = dict(class_priority or {})
+        self.class_targets = dict(class_targets or {})
         self.queue: deque[Request] = deque()  # admission queue
         self.completed: list[Request] = []
         self.failed: list[Request] = []
+        self.rejected: list[Request] = []
+        self._arrivals: list[tuple[float, int, Request]] = []  # future arrivals
+        self._arrival_seq = 0  # heap tiebreak for externally-minted ids
+        self._max_batch_seen = 0
         self.clock_s = 0.0
         self._next_id = 0
         self._next_mb = 0
@@ -139,21 +161,79 @@ class PipelinedServingLoop:
             self._rebind(affected=frozenset())
 
     # -- admission -----------------------------------------------------------
-    def submit(self, x: Any) -> Request:
-        req = Request(self._next_id, x, submitted_s=self.clock_s)
+    def submit(self, x: Any, *, slo_class: str | None = None) -> Request:
+        req = Request(
+            self._next_id, x, submitted_s=self.clock_s, slo_class=slo_class,
+            priority=self.class_priority.get(slo_class, 0),
+        )
         self._next_id += 1
         self.queue.append(req)
         return req
 
+    def schedule(self, x: Any, at_s: float, *,
+                 slo_class: str | None = None) -> Request:
+        """Open-loop admission: the request arrives at virtual time ``at_s``
+        (a trace timestamp), not when the caller happened to invoke us.
+        Future arrivals wait in a heap and are admitted -- or rejected, when
+        the admission queue is at ``admission_depth`` -- as the clock passes
+        them."""
+        req = Request(
+            self._next_id, x, submitted_s=float(at_s), slo_class=slo_class,
+            priority=self.class_priority.get(slo_class, 0),
+        )
+        self._next_id += 1
+        return self.schedule_request(req)
+
+    def schedule_request(self, req: Request) -> Request:
+        """Timestamped admission of an already-created request (the router's
+        dispatch path: per-replica clocks must never complete a request
+        before its cluster-wide arrival time)."""
+        if req.submitted_s <= self.clock_s:
+            self._admit_bounded(req)
+        else:
+            self._arrival_seq += 1
+            heapq.heappush(
+                self._arrivals, (req.submitted_s, self._arrival_seq, req))
+        return req
+
     def admit(self, req: Request) -> Request:
         """Admit an already-created request (the replica router's path: ids
-        are minted cluster-wide, so the per-replica loop must not renumber)."""
+        are minted cluster-wide, so the per-replica loop must not renumber).
+        Unbounded: the router already applied its own admission policy."""
         self.queue.append(req)
         return req
 
+    def _admit_bounded(self, req: Request) -> None:
+        if (self.admission_depth is not None
+                and len(self.queue) >= self.admission_depth):
+            self.rejected.append(req)
+        else:
+            self.queue.append(req)
+
+    def _admit_due(self) -> None:
+        """Move every arrival whose timestamp has passed into the queue."""
+        while self._arrivals and self._arrivals[0][0] <= self.clock_s:
+            _, _, req = heapq.heappop(self._arrivals)
+            self._admit_bounded(req)
+
+    @property
+    def arrivals(self) -> list[Request]:
+        """Scheduled requests whose arrival time is still in the future."""
+        return [req for _, _, req in self._arrivals]
+
+    @property
+    def pending_arrivals(self) -> int:
+        return len(self._arrivals)
+
+    @property
+    def next_arrival_s(self) -> float | None:
+        return self._arrivals[0][0] if self._arrivals else None
+
     @property
     def backlog(self) -> int:
-        """Requests not yet delivered: admission queue + in-flight batches."""
+        """Requests not yet delivered: admission queue + in-flight batches.
+        (Future arrivals are offered load, not backlog -- they have not
+        entered the system yet.)"""
         return len(self.queue) + sum(len(m.requests) for m in self._inflight)
 
     # -- one serving round -----------------------------------------------------
@@ -183,6 +263,7 @@ class PipelinedServingLoop:
             self._rebind(affected=frozenset(restarted))
         if self.control.pending or not pipe.healthy():
             self._reconcile()
+        self._admit_due()
         self._schedule()
         while len(self.completed) == done0:
             if not self._advance():
@@ -190,10 +271,13 @@ class PipelinedServingLoop:
         return self.completed[done0:]
 
     def drain(self, max_rounds: int = 100_000) -> list[Request]:
-        """Step until every admitted request completes (or max_rounds)."""
+        """Step until every admitted request completes (or max_rounds).
+        Open-loop schedules keep draining through future arrivals: the clock
+        jumps across idle gaps in the trace."""
         done: list[Request] = []
         for _ in range(max_rounds):
-            if not self.backlog and not self.control.pending:
+            if (not self.backlog and not self._arrivals
+                    and not self.control.pending):
                 break
             done.extend(self.step())
         return done
@@ -207,14 +291,24 @@ class PipelinedServingLoop:
             "mode": "pipelined",
             "completed": done,
             "failed": len(self.failed),
+            "rejected": len(self.rejected),
             "backlog": self.backlog,
+            "pending_arrivals": self.pending_arrivals,
             "clock_s": t,
             "throughput": done / t if t > 0 else 0.0,
             "retries": sum(r.attempts for r in self.completed),
+            "latency": latency_report(self.completed, self.class_targets),
             "microbatches": self._mb_completed,
             "in_flight": len(self._inflight),
             "requeued_microbatches": self._requeues,
             "queue_depth": self.queue_depth,
+            "batching": {
+                "max_batch": self.max_batch,
+                "admission_depth": self.admission_depth,
+                "max_batch_seen": self._max_batch_seen,
+                "mean_batch": (
+                    done / self._mb_completed if self._mb_completed else 0.0),
+            },
             "link_s": list(self._link_s),
             "links": [
                 {
@@ -415,8 +509,14 @@ class PipelinedServingLoop:
                 self._requeues += 1
             out.extend((req, charged) for req in mb.requests)
         out.extend((req, False) for req in self.queue)
+        # future arrivals ride along uncharged: they never entered the system
+        out.extend(
+            (req, False)
+            for _, _, req in sorted(self._arrivals)
+        )
         self._inflight.clear()
         self.queue.clear()
+        self._arrivals.clear()
         self._links_busy = [None] * len(self._links_busy)
         for st in self._stages:
             st.queue.clear()
@@ -426,12 +526,29 @@ class PipelinedServingLoop:
         return out
 
     # -- discrete-event core ---------------------------------------------------
+    def _elapse(self, t: float) -> None:
+        """Advance the clock to ``t``, integrating queue occupancy."""
+        dt = max(0.0, t - self.clock_s)
+        for st in self._stages:
+            st.queue_area += len(st.queue) * dt
+        self.clock_s = max(self.clock_s, t)
+
     def _advance(self) -> bool:
-        """Pop the earliest event batch off the virtual clock; False if idle."""
+        """Pop the earliest event batch off the virtual clock; False if idle.
+
+        A scheduled arrival is an event like any other: when it precedes
+        every pending compute/transfer (or the pipeline is idle), the clock
+        jumps to it and admission re-runs."""
         pend = [m for m in self._inflight if m.location[0] in ("compute", "link")]
         times = [m.ready_at for m in pend]
+        arrival = self.next_arrival_s
         if not times:
-            return False  # idle
+            if arrival is None:
+                return False  # idle
+            self._elapse(arrival)  # idle gap in the trace: jump to the arrival
+            self._admit_due()
+            self._schedule()
+            return True
         t = min(times)
         if t == float("inf"):
             # every pending event is a transfer on a dead link: it can never
@@ -441,10 +558,13 @@ class PipelinedServingLoop:
             self._requeue_stalled([m for m in pend if m.ready_at == float("inf")])
             self._schedule()
             return True
-        dt = max(0.0, t - self.clock_s)
-        for st in self._stages:
-            st.queue_area += len(st.queue) * dt
-        self.clock_s = max(self.clock_s, t)
+        if arrival is not None and arrival < t:
+            self._elapse(arrival)
+            self._admit_due()
+            self._schedule()
+            return True
+        self._elapse(t)
+        self._admit_due()
         k = len(self._stages)
         for mb in sorted(pend, key=lambda m: m.mb_id):
             if mb.ready_at > t:
@@ -514,15 +634,20 @@ class PipelinedServingLoop:
                     mb.location = ("compute", s)
                     mb.ready_at = self.clock_s + st.compute_s
                     progress = True
-            # admission: one microbatch per free input hop + free slot
+            # admission: one microbatch per free input hop + free slot.
+            # Continuous batching: with max_batch set, coalesce everything
+            # queued (up to the cap) into one batch instead of the fixed
+            # microbatch target -- queue pressure dynamically widens batches.
             st0 = self._stages[0]
             if (
                 self.queue
                 and self._links_busy[0] is None
                 and len(st0.queue) + st0.reserved < self.queue_depth
             ):
-                take = min(self.microbatch, len(self.queue))
-                batch = [self.queue.popleft() for _ in range(take)]
+                cap = self.max_batch if self.max_batch is not None else self.microbatch
+                take = min(cap, len(self.queue))
+                batch = self._take_batch(take)
+                self._max_batch_seen = max(self._max_batch_seen, len(batch))
                 mb = Microbatch(
                     self._next_mb, batch,
                     jnp.stack([r.x for r in batch]),
@@ -535,6 +660,23 @@ class PipelinedServingLoop:
                 st0.max_queue = max(st0.max_queue, len(st0.queue) + st0.reserved)
                 self._inflight.append(mb)
                 progress = True
+
+    def _take_batch(self, take: int) -> list[Request]:
+        """Pop ``take`` requests off admission, highest priority class first,
+        FIFO within a class (the common all-one-priority case stays a pure
+        popleft loop)."""
+        if take >= len(self.queue) or all(
+            r.priority == self.queue[0].priority for r in self.queue
+        ):
+            return [self.queue.popleft() for _ in range(take)]
+        order = sorted(range(len(self.queue)),
+                       key=lambda i: (-self.queue[i].priority, i))
+        chosen = sorted(order[:take])  # admission order within the batch
+        batch = [self.queue[i] for i in chosen]
+        left = set(chosen)
+        self.queue = deque(
+            r for i, r in enumerate(self.queue) if i not in left)
+        return batch
 
     def _readmit(self, requests: list[Request], *, retry: bool) -> None:
         """Send a microbatch's requests back to the front of admission.
@@ -608,23 +750,41 @@ class ReplicatedServingLoop:
         max_attempts: int = 5,
         recovery_penalty_s: float = 0.25,
         replica_backlog: int = 32,
+        max_batch: int | None = None,
+        admission_depth: int | None = None,
+        class_priority: dict[str, int] | None = None,
+        class_targets: dict[str, float | None] | None = None,
     ):
         if replica_backlog < 1:
             raise ValueError("replica_backlog must be >= 1")
+        if admission_depth is not None and admission_depth < 1:
+            raise ValueError("admission_depth must be >= 1")
         self.replicaset = replicaset
+        # the admission bound lives at the router (cluster-wide queue); the
+        # per-replica engines are bound by replica_backlog, never rejecting
+        self._engine_kw = dict(
+            microbatch=microbatch, queue_depth=queue_depth,
+            max_attempts=max_attempts, recovery_penalty_s=recovery_penalty_s,
+            max_batch=max_batch, class_priority=class_priority,
+            class_targets=class_targets,
+        )
         self.loops = [
-            PipelinedServingLoop(
-                control, microbatch=microbatch, queue_depth=queue_depth,
-                max_attempts=max_attempts,
-                recovery_penalty_s=recovery_penalty_s,
-            )
+            PipelinedServingLoop(control, **self._engine_kw)
             for control in replicaset.controls
         ]
         self.microbatch = int(microbatch)
         self.max_attempts = int(max_attempts)
         self.replica_backlog = int(replica_backlog)
+        self.admission_depth = (
+            None if admission_depth is None else int(admission_depth))
+        self.class_priority = dict(class_priority or {})
+        self.class_targets = dict(class_targets or {})
+        self.autoscaler = None  # attached by deploy() when the spec asks
         self.queue: deque[Request] = deque()  # cluster-wide admission
         self.completed: list[Request] = []
+        self.rejected: list[Request] = []
+        self._arrivals: list[tuple[float, int, Request]] = []
+        self._arrival_seq = 0
         self._router_failed: list[Request] = []
         self._next_id = 0
         self.dispatched = [0] * len(self.loops)
@@ -643,19 +803,72 @@ class ReplicatedServingLoop:
 
     @property
     def backlog(self) -> int:
-        """Undelivered requests anywhere: router queue + every replica."""
-        return len(self.queue) + sum(loop.backlog for loop in self.loops)
+        """Undelivered requests anywhere: router queue + every replica
+        (dispatched-but-not-yet-arrived requests included -- they are
+        committed to a replica even though its clock lags their timestamp)."""
+        return len(self.queue) + sum(
+            loop.backlog + loop.pending_arrivals for loop in self.loops)
 
     @property
     def pending(self) -> int:
         return self.replicaset.pending
 
+    @property
+    def arrivals(self) -> list[Request]:
+        """Scheduled requests the router has not admitted yet."""
+        return [req for _, _, req in self._arrivals]
+
+    @property
+    def pending_arrivals(self) -> int:
+        return len(self._arrivals)
+
     # -- admission -------------------------------------------------------------
-    def submit(self, x: Any) -> Request:
-        req = Request(self._next_id, x, submitted_s=self.clock_s)
+    def submit(self, x: Any, *, slo_class: str | None = None) -> Request:
+        req = Request(
+            self._next_id, x, submitted_s=self.clock_s, slo_class=slo_class,
+            priority=self.class_priority.get(slo_class, 0),
+        )
         self._next_id += 1
         self.queue.append(req)
         return req
+
+    def schedule(self, x: Any, at_s: float, *,
+                 slo_class: str | None = None) -> Request:
+        """Open-loop admission by trace timestamp (see the engine's
+        ``schedule``); the router admits arrivals as its clock passes them
+        and sheds load past ``admission_depth``."""
+        req = Request(
+            self._next_id, x, submitted_s=float(at_s), slo_class=slo_class,
+            priority=self.class_priority.get(slo_class, 0),
+        )
+        self._next_id += 1
+        if req.submitted_s <= self.clock_s:
+            self.queue.append(req)
+            self._shed()
+        else:
+            self._arrival_seq += 1
+            heapq.heappush(
+                self._arrivals, (req.submitted_s, self._arrival_seq, req))
+        return req
+
+    def _admit_due(self) -> None:
+        """Admit every arrival the router clock has passed, dispatch, then
+        shed whatever exceeds the cluster-wide admission bound (newest
+        first, so earlier arrivals keep their place in line)."""
+        due = False
+        while self._arrivals and self._arrivals[0][0] <= self.clock_s:
+            _, _, req = heapq.heappop(self._arrivals)
+            self.queue.append(req)
+            due = True
+        if due:
+            self._dispatch()
+            self._shed()
+
+    def _shed(self) -> None:
+        if self.admission_depth is None:
+            return
+        while len(self.queue) > self.admission_depth:
+            self.rejected.append(self.queue.pop())
 
     # -- one serving round -----------------------------------------------------
     def step(self) -> list[Request]:
@@ -667,6 +880,9 @@ class ReplicatedServingLoop:
             if rset.retired[r] and not self._reclaimed[r]:
                 self._reclaim(r)  # retired out of band (direct reconcile())
         rset.advance_rollout()
+        if self.autoscaler is not None:
+            self.autoscaler.observe(self)
+        self._admit_due()
         self._dispatch()
         guard = 0
         while len(self.completed) == done0:
@@ -675,15 +891,32 @@ class ReplicatedServingLoop:
                 raise RuntimeError("replica router made no progress")
             live = rset.live_indices()
             if not live:
-                # every replica retired: nothing left can ever serve
+                # every replica retired: grow from the standby pool if an
+                # autoscaler can, else nothing left can ever serve
+                if (self.autoscaler is not None
+                        and self.autoscaler.restore(self)):
+                    continue
                 while self.queue:
                     self._router_failed.append(self.queue.popleft())
+                while self._arrivals:
+                    _, _, req = heapq.heappop(self._arrivals)
+                    self._router_failed.append(req)
                 break
             active = [
                 r for r in live
-                if self.loops[r].backlog or self.loops[r].control.pending
+                if self.loops[r].backlog or self.loops[r].pending_arrivals
+                or self.loops[r].control.pending
             ]
             if not active:
+                if self._arrivals:
+                    # idle gap in the trace: jump every live clock to the
+                    # next arrival (the replicas share one timeline)
+                    t = self._arrivals[0][0]
+                    for i in live:
+                        self.loops[i]._elapse(t)
+                    self._admit_due()
+                    self._dispatch()
+                    continue
                 break  # idle (the dispatch above drained the router queue)
             r = min(active, key=lambda i: (self.loops[i].clock_s, i))
             try:
@@ -692,13 +925,17 @@ class ReplicatedServingLoop:
                 rset.mark_retired(r, str(e))
                 self._reclaim(r)
             rset.advance_rollout()
+            if self.autoscaler is not None:
+                self.autoscaler.observe(self)
+            self._admit_due()
             self._dispatch()
         return self.completed[done0:]
 
     def drain(self, max_rounds: int = 100_000) -> list[Request]:
         done: list[Request] = []
         for _ in range(max_rounds):
-            if not self.backlog and not self.pending:
+            if (not self.backlog and not self._arrivals
+                    and not self.pending):
                 break
             done.extend(self.step())
         return done
@@ -719,9 +956,10 @@ class ReplicatedServingLoop:
         while self.queue:
             best = None
             for r in self.replicaset.live_indices():
-                if self.loops[r].backlog >= self.replica_backlog:
+                held = self.loops[r].backlog + self.loops[r].pending_arrivals
+                if held >= self.replica_backlog:
                     continue
-                key = (self._expected_ready_s(r), self.loops[r].backlog, r)
+                key = (self._expected_ready_s(r), held, r)
                 if best is None or key < best[0]:
                     best = (key, r)
             if best is None:
@@ -729,8 +967,23 @@ class ReplicatedServingLoop:
             r = best[1]
             req = self.queue.popleft()
             req.replica = r
-            self.loops[r].admit(req)
+            # timestamped handoff: a lagging replica must not serve the
+            # request before its cluster-wide arrival time
+            self.loops[r].schedule_request(req)
             self.dispatched[r] += 1
+
+    def add_replica(self, control: ControlPlane, group) -> int:
+        """Attach a freshly-bootstrapped replica (the autoscaler's grow
+        path).  The new engine's clock starts at the router's current time,
+        so its completions never predate its birth."""
+        r = self.replicaset.add_replica(control, group)
+        loop = PipelinedServingLoop(control, **self._engine_kw)
+        loop.clock_s = self.clock_s
+        self.loops.append(loop)
+        self.dispatched.append(0)
+        self._reclaimed.append(False)
+        self._dispatch()
+        return r
 
     def _reclaim(self, r: int) -> None:
         """Pull every request out of a retired replica and re-route it.
@@ -754,19 +1007,23 @@ class ReplicatedServingLoop:
         done = len(self.completed)
         t = self.clock_s
         live = set(self.replicaset.live_indices())
-        return {
+        out = {
             "mode": "replicated",
             "completed": done,
             "failed": len(self.failed),
+            "rejected": len(self.rejected),
             "backlog": self.backlog,
+            "pending_arrivals": self.pending_arrivals,
             "clock_s": t,
             "throughput": done / t if t > 0 else 0.0,
             "retries": sum(r.attempts for r in self.completed),
+            "latency": latency_report(self.completed, self.class_targets),
             "n_replicas": len(self.loops),
             "live_replicas": len(live),
             "router": {
                 "policy": "shortest_expected_wait",
                 "replica_backlog": self.replica_backlog,
+                "admission_depth": self.admission_depth,
                 "queued": len(self.queue),
                 "dispatched": list(self.dispatched),
             },
@@ -775,6 +1032,9 @@ class ReplicatedServingLoop:
                 for r, loop in enumerate(self.loops)
             ],
         }
+        if self.autoscaler is not None:
+            out["autoscaler"] = self.autoscaler.metrics()
+        return out
 
     def steady_state_throughput(self, skip_frac: float = 0.5) -> float:
         """Aggregate requests/s: the sum of the live replicas' steady-state

@@ -46,6 +46,13 @@ class Request:
     ``replica`` is stamped by the cluster-wide router when the request is
     dispatched to a pipeline replica (re-stamped if it is re-routed after a
     replica retires); ``None`` under single-pipeline serving.
+
+    ``submitted_s`` is the *arrival* time on the virtual clock: the loop's
+    clock at ``submit()``, or the trace timestamp under open-loop
+    ``schedule()`` -- so ``completed_s - submitted_s`` is the request's full
+    admit-to-complete latency, queueing included.  ``slo_class`` names the
+    request's latency class (``None`` = unclassified); ``priority`` orders
+    continuous-batch admission (higher first, FIFO within a class).
     """
 
     req_id: int
@@ -55,10 +62,70 @@ class Request:
     completed_s: float | None = None
     result: Any = None
     replica: int | None = None
+    slo_class: str | None = None
+    priority: int = 0
 
     @property
     def done(self) -> bool:
         return self.completed_s is not None
+
+    @property
+    def latency_s(self) -> float | None:
+        """Admit-to-complete time on the virtual clock; None while pending."""
+        if self.completed_s is None:
+            return None
+        return self.completed_s - self.submitted_s
+
+
+def percentile(sorted_vals, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 1]) over pre-sorted values."""
+    if not sorted_vals:
+        return 0.0
+    import math
+
+    rank = max(1, math.ceil(q * len(sorted_vals)))
+    return float(sorted_vals[rank - 1])
+
+
+def latency_stats(requests) -> dict:
+    """p50/p95/p99 + mean/max admit-to-complete latency of completed requests."""
+    lats = sorted(r.latency_s for r in requests if r.done)
+    n = len(lats)
+    return {
+        "count": n,
+        "mean_s": sum(lats) / n if n else 0.0,
+        "p50_s": percentile(lats, 0.50),
+        "p95_s": percentile(lats, 0.95),
+        "p99_s": percentile(lats, 0.99),
+        "max_s": lats[-1] if n else 0.0,
+    }
+
+
+def latency_report(requests, class_targets: dict | None = None) -> dict:
+    """Latency percentiles overall and per SLO class.
+
+    ``class_targets`` maps class name -> target latency (seconds) or None;
+    classed entries gain ``target_s`` and ``attainment`` (fraction of the
+    class's completions within target).  Requests without a class report
+    under ``"default"``.
+    """
+    by_class: dict[str, list] = {}
+    for r in requests:
+        if r.done:
+            by_class.setdefault(r.slo_class or "default", []).append(r)
+    classes = {}
+    for name in sorted(by_class):
+        reqs = by_class[name]
+        entry = latency_stats(reqs)
+        target = (class_targets or {}).get(name)
+        entry["target_s"] = target
+        entry["attainment"] = (
+            sum(1 for r in reqs if r.latency_s <= target) / len(reqs)
+            if target is not None and reqs else None
+        )
+        classes[name] = entry
+    return {"overall": latency_stats(r for r in requests if r.done),
+            "classes": classes}
 
 
 class ServingLoop:
@@ -131,10 +198,12 @@ class ServingLoop:
             "mode": "sync",
             "completed": done,
             "failed": len(self.failed),
+            "rejected": 0,  # the sync baseline has no admission bound
             "backlog": len(self.queue),
             "clock_s": self.clock_s,
             "throughput": done / self.clock_s if self.clock_s > 0 else 0.0,
             "retries": sum(r.attempts for r in self.completed),
+            "latency": latency_report(self.completed),
         }
 
     def drain(self, max_rounds: int = 10_000) -> list[Request]:

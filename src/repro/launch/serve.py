@@ -20,9 +20,17 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.api import ClusterSpec, DeploymentSpec, deploy, list_strategies
+from repro.api import (
+    ArrivalSpec,
+    AutoscaleSpec,
+    ClusterSpec,
+    DeploymentSpec,
+    deploy,
+    list_strategies,
+)
 from repro.cluster import NodeFailed
 from repro.dataplane import list_codecs
+from repro.workload import list_traces
 from repro.configs import ARCHS, get_config, reduced
 from repro.core.model_zoo import demo_mlp
 from repro.models import lm
@@ -44,11 +52,27 @@ def serve_edge(
     replicas: int | str = 1,
     codec: str | None = None,
     tolerance: float | None = None,
+    trace: str | None = None,
+    rate: float = 400.0,
+    duration_s: float = 2.0,
+    autoscale: bool = False,
+    max_batch: int | None = None,
+    admission_depth: int | None = None,
 ) -> int:
-    """Edge-cluster serving demo: deploy(spec) -> stream -> kill -> recover."""
+    """Edge-cluster serving demo: deploy(spec) -> stream -> kill -> recover.
+
+    With ``trace``, the stream is open-loop: a seeded arrival trace
+    (``repro.workload``) admitted by timestamp on the virtual clock, with a
+    latency percentile report at the end.  ``autoscale`` turns on
+    backlog-driven replica scaling over the planner's widest feasible split.
+    """
     graph, executor_for_version = demo_mlp(d=width)
     capacity = graph.total_param_bytes * capacity_frac
 
+    arrival = None
+    if trace is not None:
+        arrival = ArrivalSpec(trace=trace, rate=rate, duration_s=duration_s,
+                              seed=seed)
     spec = DeploymentSpec(
         model=graph,
         executor_for_version=executor_for_version,
@@ -63,6 +87,10 @@ def serve_edge(
         serving=serving,
         queue_depth=queue_depth,
         replicas=replicas,
+        max_batch=max_batch,
+        admission_depth=admission_depth,
+        arrival=arrival,
+        autoscale=AutoscaleSpec() if autoscale else None,
     )
     d = deploy(spec)
     names = dict(d.plan.strategies)
@@ -77,18 +105,28 @@ def serve_edge(
               f"nodes {list(obs.path)}, bottleneck {obs.bottleneck_latency*1e3:.3f} ms, "
               f"predicted {d.plan.predicted_throughput:.1f} microbatch/s, "
               f"link codecs {list(d.plan.codecs)}")
-    for _ in range(requests):
-        d.submit(jnp.ones((width,)) * 0.1)
+    if trace is not None:
+        requests = len(d.submit_trace(
+            make_input=lambda i, a: jnp.ones((width,)) * 0.1))
+        print(f"open-loop trace '{trace}': {requests} arrivals over "
+              f"{duration_s:g}s at nominal {rate:g} req/s"
+              + (", autoscaling" if autoscale else ""))
+    else:
+        for _ in range(requests):
+            d.submit(jnp.ones((width,)) * 0.1)
     half = requests // 2
     killed = half == 0  # nothing to kill mid-stream on a tiny run
-    while d.loop.backlog or d.pending:
+    pending_arrivals = lambda: getattr(d.loop, "pending_arrivals", 0)  # noqa: E731
+    while d.loop.backlog or d.pending or pending_arrivals():
         if not killed and len(d.loop.completed) >= half:
             pods = d.control.pipeline.pods
             victim = pods[1 if len(pods) > 1 else 0].node_id
             print(f"killing node {victim} mid-stream...")
             d.inject(NodeFailed(victim))
             killed = True
-        d.step()
+        if (not d.step() and not d.pending
+                and not pending_arrivals() and not d.loop.backlog):
+            break
     m = d.metrics()
     if d.replicated:
         s = m["serving"]
@@ -115,6 +153,23 @@ def serve_edge(
                   f"({ln['compression_x']:.2f}x), "
                   f"utilization {ln['utilization']:.2f}, "
                   f"{ln['transfers']} transfers")
+    s = m["serving"]
+    if trace is not None:
+        lat = s["latency"]["overall"]
+        print(f"latency (admit -> complete): p50 {lat['p50_s']*1e3:.2f} ms, "
+              f"p95 {lat['p95_s']*1e3:.2f} ms, p99 {lat['p99_s']*1e3:.2f} ms, "
+              f"max {lat['max_s']*1e3:.2f} ms; rejected {s['rejected']}")
+        b = s.get("batching")
+        if b:
+            print(f"batching: cap {b['max_batch']}, peak batch "
+                  f"{b['max_batch_seen']}, mean batch {b['mean_batch']:.2f}")
+    if "autoscaler" in s:
+        a = s["autoscaler"]
+        print(f"autoscaler: {a['grows']} grows, {a['shrinks']} shrinks, "
+              f"{a['standby_groups']} standby groups left")
+        for e in a["events"]:
+            print(f"  t={e['t_s']:.3f}s {e['action']} replica {e['replica']} "
+                  f"({e['reason']}) -> {e['live_after']} live")
     return 0
 
 
@@ -159,6 +214,22 @@ def main() -> int:
     ap.add_argument("--tolerance", type=float, default=None,
                     help="edge mode per-link accuracy tolerance (max codec "
                          "round-trip error relative to max|x|)")
+    ap.add_argument("--trace", default=None, choices=list_traces(),
+                    help="edge mode open-loop arrival trace (replaces the "
+                         "closed-loop --requests stream)")
+    ap.add_argument("--rate", type=float, default=400.0,
+                    help="edge mode trace mean arrival rate (req/s)")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="edge mode trace duration (virtual seconds)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="edge mode backlog-driven replica autoscaling "
+                         "(scales over the widest feasible replica split)")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="edge mode continuous-batching cap (coalesce up to "
+                         "this many queued requests per admission)")
+    ap.add_argument("--admission-depth", type=int, default=None,
+                    help="edge mode admission queue bound; arrivals beyond "
+                         "it are rejected (load shedding) instead of queued")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -170,6 +241,9 @@ def main() -> int:
             capacity_frac=args.capacity_frac, width=args.width,
             serving=args.serving, queue_depth=args.queue_depth,
             replicas=replicas, codec=args.codec, tolerance=args.tolerance,
+            trace=args.trace, rate=args.rate, duration_s=args.duration,
+            autoscale=args.autoscale, max_batch=args.max_batch,
+            admission_depth=args.admission_depth,
         )
     if not args.arch:
         ap.error("--arch is required unless --edge is given")

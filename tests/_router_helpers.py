@@ -1,10 +1,11 @@
 """Shared assertions for replicated-serving tests.
 
 The replica router's conservation invariant -- every admitted request lives
-in exactly one of {completed, failed, router queue, a replica's admission
-queue, an in-flight microbatch} -- is asserted by both the router property
-suite and the replica chaos scenarios; one walker keeps the two in lockstep
-when the router grows a new holding location.
+in exactly one of {completed, failed, rejected, router queue, router arrival
+heap, a replica's admission queue, a replica's arrival heap, an in-flight
+microbatch} -- is asserted by the router property suite, the workload
+property suite, and the replica chaos scenarios; one walker keeps them in
+lockstep when the router grows a new holding location.
 """
 
 
@@ -14,10 +15,28 @@ def assert_router_conserved(dep, submitted_ids):
     everywhere = (
         [r.req_id for r in loop.completed]
         + [r.req_id for r in loop.failed]
+        + [r.req_id for r in loop.rejected]
         + [r.req_id for r in loop.queue]
+        + [r.req_id for r in loop.arrivals]
         + [r.req_id for sub in loop.loops for r in sub.queue]
+        + [r.req_id for sub in loop.loops for r in sub.arrivals]
+        + [r.req_id for sub in loop.loops for r in sub.rejected]
         + [r.req_id for sub in loop.loops for mb in sub._inflight
            for r in mb.requests]
+    )
+    assert len(everywhere) == len(set(everywhere)), "request duplicated"
+    assert sorted(everywhere) == sorted(submitted_ids), "request lost"
+
+
+def assert_engine_conserved(loop, submitted_ids):
+    """Same walk for a single (non-replicated) pipelined engine."""
+    everywhere = (
+        [r.req_id for r in loop.completed]
+        + [r.req_id for r in loop.failed]
+        + [r.req_id for r in loop.rejected]
+        + [r.req_id for r in loop.queue]
+        + [r.req_id for r in loop.arrivals]
+        + [r.req_id for mb in loop._inflight for r in mb.requests]
     )
     assert len(everywhere) == len(set(everywhere)), "request duplicated"
     assert sorted(everywhere) == sorted(submitted_ids), "request lost"

@@ -424,3 +424,76 @@ def test_passthrough_executor_for_zoo_models():
     (req,) = d.drain()
     assert req.done
     assert d.loop.clock_s > 0  # simulated link time still advances
+
+
+# ---------------------------------------------------------------------------
+# Open-loop serving spec surface (traces, SLO classes, batching, autoscale)
+# ---------------------------------------------------------------------------
+
+def _codes(spec):
+    return {i.code for i in spec.validate()}
+
+
+def test_bad_batching_and_admission_codes():
+    from repro.api import ArrivalSpec  # noqa: F401  (surface check)
+
+    assert "bad_batching" in _codes(_demo_spec(max_batch=0))
+    assert "bad_batching" in _codes(_demo_spec(admission_depth=-1))
+    assert "bad_batching" not in _codes(_demo_spec(max_batch=8,
+                                                   admission_depth=64))
+
+
+def test_slo_class_validation_codes():
+    from repro.api import SLOClass
+
+    bad = _demo_spec(slo_classes=(SLOClass("gold", target_latency_s=-1.0),))
+    assert "bad_slo_class" in _codes(bad)
+    dup = _demo_spec(slo_classes=(SLOClass("a"), SLOClass("a")))
+    assert "bad_slo_class" in _codes(dup)
+    ok = _demo_spec(slo_classes=(SLOClass("gold", priority=1,
+                                          target_latency_s=0.5),
+                                 SLOClass("std")))
+    assert "bad_slo_class" not in _codes(ok)
+    assert ok.class_priority() == {"gold": 1, "std": 0}
+    assert ok.class_targets() == {"gold": 0.5, "std": None}
+
+
+def test_arrival_spec_validation_codes():
+    from repro.api import ArrivalSpec
+
+    unknown = _demo_spec(arrival=ArrivalSpec(trace="poison"))
+    assert "unknown_trace" in _codes(unknown)
+    assert "bad_arrival" in _codes(_demo_spec(arrival=ArrivalSpec(rate=0.0)))
+    assert "bad_arrival" in _codes(
+        _demo_spec(arrival=ArrivalSpec(duration_s=-1.0)))
+    # open-loop arrivals need the pipelined engine
+    sync = _demo_spec(serving="sync", arrival=ArrivalSpec())
+    assert "bad_serving" in _codes(sync)
+    assert not {"unknown_trace", "bad_arrival", "bad_serving"} & _codes(
+        _demo_spec(arrival=ArrivalSpec(trace="bursty", rate=50.0,
+                                       duration_s=2.0)))
+
+
+def test_autoscale_spec_validation_codes():
+    from repro.api import AutoscaleSpec
+
+    assert "bad_autoscale" in _codes(
+        _demo_spec(autoscale=AutoscaleSpec(min_replicas=0)))
+    assert "bad_autoscale" in _codes(
+        _demo_spec(autoscale=AutoscaleSpec(backlog_high=2.0, backlog_low=4.0)))
+    # autoscaling owns the replica count: an explicit replicas=N conflicts
+    assert "bad_autoscale" in _codes(
+        _demo_spec(replicas=2, autoscale=AutoscaleSpec()))
+    # ``autoscale=True`` sugar coerces to the default policy
+    sugar = _demo_spec(autoscale=True)
+    assert isinstance(sugar.autoscale, AutoscaleSpec)
+    assert "bad_autoscale" not in _codes(sugar)
+
+
+def test_autoscale_min_replicas_infeasible_at_deploy():
+    from repro.api import AutoscaleSpec
+
+    spec = _demo_spec(autoscale=AutoscaleSpec(min_replicas=64))
+    with pytest.raises(InfeasibleSpecError) as ei:
+        deploy(spec)
+    assert any(i.code == "infeasible_replicas" for i in ei.value.issues)

@@ -105,6 +105,29 @@ def test_bandwidth_sweep_benchmark_emits_a_valid_canonical_artifact(
     assert payload["claims"]["best_vs_predicted"] <= 1.05
 
 
+def test_latency_pareto_benchmark_emits_a_valid_canonical_artifact(
+        tmp_path, monkeypatch):
+    """End to end: the open-loop latency pareto writes one schema-valid
+    BENCH_ artifact whose claims pin the saturation behavior -- bounded
+    p99 with rejected overflow past capacity, and the autoscaler beating
+    the fixed single replica by >= 1.5x on the bursty trace."""
+    from benchmarks import latency_pareto
+
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path)
+    latency_pareto.run(duration_s=1.0)
+    (path,) = tmp_path.iterdir()
+    assert path.name == f"{ARTIFACT_PREFIX}latency_pareto.json"
+    payload = json.loads(path.read_text())
+    validate_payload(path.stem, payload)
+    loads = [r["load_x"] for r in payload["rows"]]
+    assert min(loads) < 1.0 < max(loads), "sweep must straddle saturation"
+    assert payload["claims"]["overload_rejects"] > 0
+    assert payload["claims"]["underload_rejects"] == 0
+    assert payload["claims"]["worst_p99_ms"] <= payload["claims"]["p99_bound_ms"]
+    assert payload["claims"]["autoscale_gain"] >= 1.5
+    assert payload["serving"]["max_batch"] >= 1
+
+
 def test_every_benchmark_declares_its_artifact_name():
     """run.py (and the CI upload step) resolve artifact paths through each
     module's ARTIFACT constant -- the single source of the basename."""
@@ -112,9 +135,31 @@ def test_every_benchmark_declares_its_artifact_name():
 
     for mod in ("algo_scaling", "approx_ratio", "bandwidth_sweep",
                 "churn_throughput", "fig3_bottleneck", "joint_opt",
-                "kernel_bench", "replica_scaling", "throughput_scaling"):
+                "kernel_bench", "latency_pareto", "replica_scaling",
+                "throughput_scaling"):
         m = importlib.import_module(f"benchmarks.{mod}")
         assert isinstance(m.ARTIFACT, str) and m.ARTIFACT, mod
+
+
+def test_every_artifact_module_is_registered_in_the_driver():
+    """Every benchmarks/*.py that declares an ARTIFACT must be wired into
+    run.py's registry -- a benchmark that exists but never runs is a silent
+    coverage hole (and its artifact silently goes stale)."""
+    import importlib
+
+    from benchmarks.run import bench_registry
+
+    bench_dir = Path(__file__).resolve().parent.parent / "benchmarks"
+    declared = set()
+    for p in sorted(bench_dir.glob("*.py")):
+        if p.stem in ("common", "run", "__init__"):
+            continue
+        if "ARTIFACT = " not in p.read_text():
+            continue
+        declared.add(importlib.import_module(f"benchmarks.{p.stem}").ARTIFACT)
+    registered = {module.ARTIFACT for module, _ in bench_registry().values()}
+    missing = declared - registered
+    assert not missing, f"benchmarks not wired into run.py: {sorted(missing)}"
 
 
 # ---------------------------------------------------------------------------

@@ -351,3 +351,99 @@ def test_chaos_event_burst_between_quiet_phases(seed):
     assert len(dep.loop.completed) == 40 and not dep.loop.failed
     obs = dep.observed()
     assert obs.healthy and obs.version == dep.control.desired.version
+
+
+# ---------------------------------------------------------------------------
+# Saturation: open-loop overload + node kill (load shedding + autoscaling)
+# ---------------------------------------------------------------------------
+
+SAT_HOSTING = 8
+SAT_CAPACITY = 1.05e6  # 2 layers/node -> 4-stage pipelines, 2 feasible splits
+SAT_ADMISSION = 32
+
+
+def _saturation_deployment(seed):
+    """Autoscaled open-loop deployment on a synthetic symmetric cluster
+    (passthrough math: saturation behavior is a pure timing-model property)."""
+    from repro.api import ArrivalSpec, AutoscaleSpec
+    from repro.core.graph import Layer, LayerGraph
+    from repro.core.placement import CommGraph
+
+    layers = tuple(
+        Layer(f"l{i}", param_bytes=500_000, out_bytes=100_000, flops=5_000_000)
+        for i in range(8)
+    )
+    graph = LayerGraph("synth8", layers, in_bytes=50_000)
+    bw = np.full((SAT_HOSTING + 1, SAT_HOSTING + 1), 20e6)
+    np.fill_diagonal(bw, 0.0)
+    caps = np.full(SAT_HOSTING + 1, SAT_CAPACITY)
+    caps[0] = -1.0
+
+    def spec(**kw):
+        return DeploymentSpec(
+            model=graph, cluster=ClusterSpec(comm=CommGraph(bw=bw, node_capacity=caps)),
+            capacity=SAT_CAPACITY, seed=seed, microbatch=1, max_batch=8,
+            admission_depth=SAT_ADMISSION, **kw)
+
+    # calibrate: closed-loop saturation throughput of one pipeline
+    probe = deploy(spec())
+    for _ in range(40):
+        probe.submit(jnp.ones((4,)))
+    probe.drain()
+    capacity = 40 / probe.loop.clock_s
+
+    dep = deploy(spec(
+        arrival=ArrivalSpec(trace="bursty", rate=3.0 * capacity,
+                            duration_s=1.0, seed=seed),
+        autoscale=AutoscaleSpec(min_replicas=1, backlog_high=6.0,
+                                backlog_low=1.0, cooldown_s=0.05)))
+    return dep, capacity
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_saturation_kill_under_overload(seed):
+    """Kill a serving node while the cluster is past saturation: the
+    overflow is rejected (never silently lost), the tail stays bounded by
+    the admission queue, and completions keep strictly increasing through
+    the kill and every scale event."""
+    dep, capacity = _saturation_deployment(seed)
+    reqs = dep.submit_trace(make_input=lambda i, a: jnp.ones((4,)))
+    ids = [r.req_id for r in reqs]
+
+    killed = False
+    progress = [0]
+    steps = 0
+    while dep.loop.backlog or dep.loop.pending_arrivals or dep.pending:
+        steps += 1
+        assert steps < 50_000, "saturation scenario did not drain"
+        if not killed and len(dep.loop.completed) >= len(reqs) // 4:
+            live = dep.replicaset.live_indices()
+            victim = sorted(dep.replicaset.groups[live[0]])[0]
+            dep.inject(NodeFailed(victim))
+            killed = True
+        progressed = bool(dep.step()) or dep.pending
+        if steps % 40 == 0:
+            progress.append(len(dep.loop.completed))
+            assert_router_conserved(dep, ids)
+        if (not progressed and not dep.loop.pending_arrivals
+                and not dep.loop.backlog):
+            break
+    progress.append(len(dep.loop.completed))
+
+    m = dep.metrics()["serving"]
+    # conservation: admitted = completed + failed + rejected, none lost
+    assert m["completed"] + m["failed"] + m["rejected"] == len(reqs)
+    assert_router_conserved(dep, ids)
+    # the overload was shed, not queued without bound or dropped silently
+    assert m["rejected"] > 0, "3x overload must trigger load shedding"
+    # tail bounded by the admission queue, not by the trace length
+    p99 = m["latency"]["overall"]["p99_s"]
+    assert p99 <= 4.0 * SAT_ADMISSION / capacity, (p99, capacity)
+    # serving never stalled: completions strictly increase across windows
+    assert killed
+    deltas = [b - a for a, b in zip(progress, progress[1:])]
+    assert all(d > 0 for d in deltas), progress
+    # the kill was absorbed: the set still has live replicas and the
+    # autoscaler record explains every capacity move
+    assert dep.replicaset.live_indices()
+    assert m["autoscaler"]["grows"] >= 1

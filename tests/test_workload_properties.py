@@ -1,0 +1,193 @@
+"""Property + regression tests for open-loop serving under trace-driven load.
+
+Properties (hypothesis when installed, deterministic fallback otherwise):
+
+  * generated traces are sorted, in-range, and a pure function of
+    ``(name, rate, duration, seed)``;
+  * latency percentiles are ordered (p50 <= p95 <= p99 <= max) for every
+    trace shape and seed;
+  * request conservation -- admitted = completed + rejected + failed, and
+    mid-flight every request lives in exactly one holding location -- holds
+    under random churn;
+  * continuous batching never coalesces past ``max_batch``.
+
+Plus the determinism regression: one (spec, trace seed) pair must produce an
+identical serving-metrics payload across two full runs -- the virtual clock
+has no hidden wall-clock or ordering nondeterminism.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    ArrivalSpec,
+    AutoscaleSpec,
+    ClusterSpec,
+    DeploymentSpec,
+    deploy,
+)
+from repro.cluster import NodeFailed
+from repro.core.graph import Layer, LayerGraph
+from repro.core.placement import CommGraph
+from repro.workload import UnknownTraceError, list_traces, make_trace
+
+from tests._hypothesis_compat import given, settings, st
+from tests._router_helpers import assert_engine_conserved, assert_router_conserved
+
+N_HOSTING = 8
+PARAM_BYTES = 500_000
+CAPACITY = 1.05e6  # 2 layers/node -> 4-stage pipelines, 2 feasible replicas
+
+
+def _graph() -> LayerGraph:
+    layers = tuple(
+        Layer(f"l{i}", param_bytes=PARAM_BYTES, out_bytes=100_000,
+              flops=5_000_000)
+        for i in range(8)
+    )
+    return LayerGraph("synth8", layers, in_bytes=50_000)
+
+
+def _comm() -> CommGraph:
+    bw = np.full((N_HOSTING + 1, N_HOSTING + 1), 20e6)
+    np.fill_diagonal(bw, 0.0)
+    cap = np.full(N_HOSTING + 1, CAPACITY)
+    cap[0] = -1.0
+    return CommGraph(bw=bw, node_capacity=cap)
+
+
+def _spec(seed=0, **kw) -> DeploymentSpec:
+    return DeploymentSpec(
+        model=_graph(), cluster=ClusterSpec(comm=_comm()), capacity=CAPACITY,
+        seed=seed, microbatch=1, **kw)
+
+
+def _drive(dep, *, kill=None, kill_after=0, conserve_every=None, ids=None):
+    """Serve everything; optionally kill a node after N completions and
+    assert conservation at every M-th step."""
+    killed = kill is None
+    steps = 0
+    while dep.loop.backlog or dep.loop.pending_arrivals or dep.pending:
+        if not killed and len(dep.loop.completed) >= kill_after:
+            dep.inject(NodeFailed(kill))
+            killed = True
+        progressed = bool(dep.step()) or dep.pending
+        steps += 1
+        if conserve_every and steps % conserve_every == 0:
+            assert_router_conserved(dep, ids)
+        if (not progressed and not dep.loop.pending_arrivals
+                and not dep.loop.backlog):
+            break
+
+
+# ---------------------------------------------------------------------------
+# Trace generation
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(tr=st.integers(0, 3), seed=st.integers(0, 10_000),
+       rate=st.integers(50, 400))
+def test_traces_sorted_in_range_deterministic(tr, seed, rate):
+    name = list_traces()[tr % len(list_traces())]
+    t1 = make_trace(name, rate=float(rate), duration_s=1.5, seed=seed,
+                    classes={"gold": 1.0, "std": 3.0})
+    t2 = make_trace(name, rate=float(rate), duration_s=1.5, seed=seed,
+                    classes={"gold": 1.0, "std": 3.0})
+    times = [a.t_s for a in t1.arrivals]
+    assert times == sorted(times)
+    assert all(0.0 <= t < 1.5 for t in times)
+    assert [(a.t_s, a.slo_class) for a in t1.arrivals] == \
+        [(a.t_s, a.slo_class) for a in t2.arrivals]
+    assert {a.slo_class for a in t1.arrivals} <= {"gold", "std"}
+
+
+def test_unknown_trace_suggests():
+    with pytest.raises(UnknownTraceError) as ei:
+        make_trace("poison", rate=10.0, duration_s=1.0)
+    assert "poisson" in str(ei.value)
+
+
+def test_trace_rejects_bad_params():
+    with pytest.raises(ValueError):
+        make_trace("poisson", rate=0.0, duration_s=1.0)
+    with pytest.raises(ValueError):
+        make_trace("poisson", rate=10.0, duration_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Latency percentiles + batching bound (single pipeline)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(tr=st.integers(0, 3), seed=st.integers(0, 1000),
+       mb=st.integers(2, 8))
+def test_percentiles_ordered_and_batch_bounded(tr, seed, mb):
+    name = list_traces()[tr % len(list_traces())]
+    dep = deploy(_spec(
+        seed=seed, max_batch=mb, admission_depth=24,
+        arrival=ArrivalSpec(trace=name, rate=120.0, duration_s=1.0,
+                            seed=seed)))
+    reqs = dep.submit_trace(make_input=lambda i, a: jnp.ones((4,)))
+    _drive(dep)
+    m = dep.metrics()["serving"]
+    lat = m["latency"]["overall"]
+    assert lat["p50_s"] <= lat["p95_s"] <= lat["p99_s"] <= lat["max_s"]
+    assert m["batching"]["max_batch_seen"] <= mb
+    assert all(len(mb_.requests) <= mb for mb_ in dep.loop._inflight)
+    assert m["completed"] + m["failed"] + m["rejected"] == len(reqs)
+    assert_engine_conserved(dep.loop, [r.req_id for r in reqs])
+    assert all(r.latency_s >= 0 for r in dep.loop.completed)
+
+
+# ---------------------------------------------------------------------------
+# Conservation under churn (replicated + autoscaled)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000), victim=st.integers(1, N_HOSTING),
+       kill_after=st.integers(3, 40))
+def test_conservation_under_churn(seed, victim, kill_after):
+    dep = deploy(_spec(
+        seed=seed, max_batch=4, admission_depth=64,
+        arrival=ArrivalSpec(trace="bursty", rate=250.0, duration_s=1.0,
+                            seed=seed),
+        autoscale=AutoscaleSpec(min_replicas=1, backlog_high=6.0,
+                                backlog_low=1.0, cooldown_s=0.05)))
+    reqs = dep.submit_trace(make_input=lambda i, a: jnp.ones((4,)))
+    ids = [r.req_id for r in reqs]
+    _drive(dep, kill=victim, kill_after=kill_after, conserve_every=7, ids=ids)
+    m = dep.metrics()["serving"]
+    assert m["completed"] + m["failed"] + m["rejected"] == len(reqs)
+    assert_router_conserved(dep, ids)
+
+
+# ---------------------------------------------------------------------------
+# Determinism regression
+# ---------------------------------------------------------------------------
+
+def _run_once(autoscale: bool) -> dict:
+    kw = dict(
+        seed=3, max_batch=4, admission_depth=48,
+        arrival=ArrivalSpec(trace="heavy-tailed", rate=200.0, duration_s=1.0,
+                            seed=11))
+    if autoscale:
+        kw["autoscale"] = AutoscaleSpec(min_replicas=1, backlog_high=6.0,
+                                        backlog_low=1.0, cooldown_s=0.05)
+    dep = deploy(_spec(**kw))
+    dep.submit_trace(make_input=lambda i, a: jnp.ones((4,)))
+    _drive(dep, kill=2, kill_after=25)
+    return dep.metrics()["serving"]
+
+
+@pytest.mark.parametrize("autoscale", [False, True],
+                         ids=["single", "autoscaled"])
+def test_same_seed_same_metrics(autoscale):
+    """Same trace seed + spec -> byte-identical serving metrics payload."""
+    a = json.dumps(_run_once(autoscale), sort_keys=True, default=str)
+    b = json.dumps(_run_once(autoscale), sort_keys=True, default=str)
+    assert a == b
