@@ -1,0 +1,224 @@
+"""Multi-tenant co-residency: throughput retention + churn isolation.
+
+Two heterogeneous tenants share one 16-hosting-node edge cluster under the
+tenancy scheduler's partition carve (50/50 capacity fractions).  The two
+claims that make tenancy worth its complexity:
+
+  * **throughput retention** -- each co-located tenant completes >= 70% of
+    the closed-loop throughput it achieves when deployed *alone* on the
+    full cluster.  (The carve halves each tenant's node count, but a
+    pipeline only needs as many nodes as it has stages, so a well-packed
+    slice keeps the bottleneck unchanged.)
+  * **churn isolation** -- killing a node that hosts only tenant A leaves
+    tenant B's completion cadence (median inter-completion gap) within 5%
+    of its pre-churn value: A re-plans inside its slice, B's engine never
+    hears about it.
+
+  PYTHONPATH=src python -m benchmarks.multi_tenant [--requests N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import statistics
+
+import numpy as np
+
+from repro.api import ClusterSpec, DeploymentSpec, TenantSpec, deploy
+from repro.cluster import NodeFailed
+from repro.core.graph import Layer, LayerGraph
+from repro.core.placement import CommGraph
+
+from benchmarks.common import save, table
+
+ARTIFACT = "multi_tenant"  # results/BENCH_multi_tenant.json
+
+N_HOSTING = 16
+LINK_BYTES_S = 20e6
+CAPACITY = 4.2e6
+RETENTION_FLOOR = 0.70
+CADENCE_TOL = 0.05
+
+# heterogeneous tenants: different depths, widths, and compute densities
+TENANT_SHAPES = {
+    "alpha": dict(n_layers=16, param_bytes=1_000_000, act_bytes=200_000,
+                  flops=20_000_000),
+    "beta": dict(n_layers=12, param_bytes=1_500_000, act_bytes=150_000,
+                 flops=30_000_000),
+}
+
+
+def _graph(name: str, n_layers: int, param_bytes: int, act_bytes: int,
+           flops: int) -> LayerGraph:
+    layers = tuple(
+        Layer(f"{name}{i}", param_bytes=param_bytes, out_bytes=act_bytes,
+              flops=flops)
+        for i in range(n_layers)
+    )
+    return LayerGraph(name, layers, in_bytes=act_bytes // 2)
+
+
+def _comm() -> CommGraph:
+    bw = np.full((N_HOSTING + 1, N_HOSTING + 1), LINK_BYTES_S)
+    np.fill_diagonal(bw, 0.0)
+    cap = np.full(N_HOSTING + 1, CAPACITY)
+    cap[0] = -1.0  # dispatcher hosts no partition
+    return CommGraph(bw=bw, node_capacity=cap)
+
+
+def _spec(name: str, seed: int, comm: CommGraph | None = None) -> DeploymentSpec:
+    return DeploymentSpec(
+        model=_graph(name, **TENANT_SHAPES[name]),
+        cluster=ClusterSpec(comm=comm if comm is not None else _comm()),
+        capacity=CAPACITY,
+        seed=seed,
+        microbatch=1,  # one completion per request: clean cadence signal
+    )
+
+
+def solo_throughput(name: str, requests: int, seed: int) -> float:
+    """Closed-loop throughput of the tenant alone on the full cluster."""
+    dep = deploy(_spec(name, seed))
+    for i in range(requests):
+        dep.submit(i)
+    dep.drain()
+    assert len(dep.loop.completed) == requests
+    return requests / dep.loop.clock_s
+
+
+def _tenants(seed: int) -> list[TenantSpec]:
+    comm = _comm()  # one shared cluster: tenants must agree on it
+    return [
+        TenantSpec(name, _spec(name, seed, comm), capacity_fraction=0.5)
+        for name in TENANT_SHAPES
+    ]
+
+
+def colocated_throughput(requests: int, seed: int) -> dict[str, float]:
+    """Per-tenant closed-loop throughput under the 50/50 partition carve."""
+    d = deploy(_tenants(seed))
+    for i in range(requests):
+        for name in TENANT_SHAPES:
+            d.submit(name, i)
+    d.drain()
+    out = {}
+    for name in TENANT_SHAPES:
+        loop = d.router.loop(name)
+        assert len(loop.completed) == requests, (name, len(loop.completed))
+        out[name] = requests / loop.clock_s
+    return out
+
+
+def _median_gap(times: list[float]) -> float:
+    gaps = [b - a for a, b in zip(times, times[1:]) if b > a]
+    return statistics.median(gaps)
+
+
+def churn_isolation(requests: int, seed: int) -> dict:
+    """Kill a node hosting only tenant alpha mid-stream; beta's completion
+    cadence must not move."""
+    d = deploy(_tenants(seed))
+    for i in range(requests):
+        for name in TENANT_SHAPES:
+            d.submit(name, i)
+
+    beta = d.router.loop("beta")
+    # the victim must actually carry alpha's pipeline for the churn to bite
+    victim = d.deployment("alpha").control.pipeline.pods[0].node_id
+    assert victim in d.nodes_for("alpha")
+    assert victim not in d.nodes_for("beta")
+
+    kill_at = requests // 2
+    killed_idx = None
+    while d.router.backlog or d.pending:
+        if killed_idx is None and len(beta.completed) >= kill_at:
+            killed_idx = len(beta.completed)
+            d.inject(NodeFailed(victim))
+        if not d.step() and not d.pending and not d.router.backlog:
+            break
+    assert killed_idx is not None
+    acts = {name: [a.kind for a in ctl.history]
+            for name, ctl in (("alpha", d.deployment("alpha").control),
+                              ("beta", d.deployment("beta").control))}
+    assert len(beta.completed) == requests, len(beta.completed)
+
+    times = sorted(r.completed_s for r in beta.completed)
+    warmup = max(2, requests // 8)  # skip the pipeline-fill ramp
+    pre = _median_gap(times[warmup:killed_idx])
+    post = _median_gap(times[killed_idx:])
+    drift = abs(post / pre - 1.0)
+    return {
+        "victim_node": victim,
+        "killed_after_beta_completions": killed_idx,
+        "alpha_actions": acts["alpha"],
+        "beta_actions": acts["beta"],
+        "beta_pre_gap_s": pre,
+        "beta_post_gap_s": post,
+        "beta_cadence_drift": drift,
+    }
+
+
+def run(requests: int = 48, seed: int = 0) -> dict:
+    solo = {name: solo_throughput(name, requests, seed)
+            for name in TENANT_SHAPES}
+    colo = colocated_throughput(requests, seed)
+    retention = {name: colo[name] / solo[name] for name in TENANT_SHAPES}
+    iso = churn_isolation(requests, seed)
+
+    rows = [
+        {
+            "tenant": name,
+            "solo_req_s": solo[name],
+            "colocated_req_s": colo[name],
+            "retention": retention[name],
+        }
+        for name in TENANT_SHAPES
+    ]
+    claims = {
+        "min_retention": min(retention.values()),
+        "retention_floor": RETENTION_FLOOR,
+        "beta_cadence_drift": iso["beta_cadence_drift"],
+        "cadence_tolerance": CADENCE_TOL,
+        "alpha_replanned": any(a != "noop" for a in iso["alpha_actions"]),
+        "beta_untouched": iso["beta_actions"] == [],
+    }
+    payload = {
+        "rows": rows,
+        "isolation": iso,
+        "claims": claims,
+        "cluster": {
+            "hosting_nodes": N_HOSTING,
+            "link_bytes_s": LINK_BYTES_S,
+            "capacity_bytes": CAPACITY,
+            "policy": "partition",
+            "fractions": {name: 0.5 for name in TENANT_SHAPES},
+        },
+        "workload": {"requests_per_tenant": requests, "seed": seed},
+    }
+    save(ARTIFACT, payload)
+    print(table(rows, ["tenant", "solo_req_s", "colocated_req_s", "retention"],
+                "Multi-tenant throughput retention (16 hosting nodes, 50/50)"))
+    print(f"isolation: {iso}")
+    print(f"claims: {claims}")
+
+    # claim (a): each co-located tenant keeps >= 70% of its solo throughput
+    assert claims["min_retention"] >= RETENTION_FLOOR, claims
+    # claim (b): churn on alpha's slice leaves beta's cadence within 5%
+    assert claims["beta_cadence_drift"] <= CADENCE_TOL, claims
+    assert claims["alpha_replanned"], iso
+    assert claims["beta_untouched"], iso
+    return payload
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=48,
+                    help="closed-loop requests per tenant per leg")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(requests=args.requests, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

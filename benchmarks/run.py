@@ -33,6 +33,7 @@ def bench_registry(fast: bool = False) -> dict:
         joint_opt,
         kernel_bench,
         latency_pareto,
+        multi_tenant,
         replica_scaling,
         throughput_scaling,
     )
@@ -59,6 +60,9 @@ def bench_registry(fast: bool = False) -> dict:
         "latency": (latency_pareto,
                     lambda: latency_pareto.run(
                         duration_s=1.0 if fast else 2.0)),
+        "multi_tenant": (multi_tenant,
+                         lambda: multi_tenant.run(
+                             requests=24 if fast else 48)),
     }
 
 

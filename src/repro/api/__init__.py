@@ -46,6 +46,9 @@ _LAZY = {
     "InfeasibleSpecError": "repro.api.spec",
     "SLOClass": "repro.api.spec",
     "SpecIssue": "repro.api.spec",
+    "TenantSpec": "repro.api.spec",
+    "as_tenants": "repro.api.spec",
+    "validate_tenants": "repro.api.spec",
     "Plan": "repro.api.planner",
     "Planner": "repro.api.planner",
     "ReplicatedPlan": "repro.api.planner",

@@ -24,7 +24,7 @@ from typing import Any
 
 import numpy as np
 
-from repro.api.planner import Plan, Planner, ReplicatedPlan
+from repro.api.planner import Plan, Planner, ReplicatedPlan, subcluster
 from repro.api.spec import DeploymentSpec, InfeasibleSpecError, SpecIssue
 from repro.cluster.controlplane import (
     ControlPlane,
@@ -51,12 +51,30 @@ def deploy(
     store_root: str | None = None,
     version: int = 0,
     flops_per_s: float = 1e9,
+    **tenancy_kw,
 ) -> "Deployment":
     """Validate ``spec``, build the stack, bootstrap, return the facade.
 
     Raises ``InfeasibleSpecError`` with structured reasons when the spec
     cannot deploy (unknown strategy, layer over capacity, missed SLO, ...).
+
+    A *list* of specs (``DeploymentSpec`` or ``TenantSpec``) deploys every
+    tenant onto ONE shared cluster and returns a ``MultiTenantDeployment``
+    (``repro.tenancy``): the tenancy scheduler carves the hosting nodes
+    under per-tenant capacity fractions, and churn on one tenant's nodes
+    never perturbs another's pipelines.
     """
+    if isinstance(spec, (list, tuple)):
+        from repro.tenancy import deploy_tenants
+
+        return deploy_tenants(
+            spec, store_root=store_root, version=version,
+            flops_per_s=flops_per_s, **tenancy_kw,
+        )
+    if tenancy_kw:
+        raise TypeError(
+            f"unexpected keyword(s) {sorted(tenancy_kw)} -- tenancy options "
+            f"apply only when deploying a list of specs")
     spec.check()
     graph, model_executor = spec.resolve_model()
     comm, positions = spec.cluster.build()
@@ -64,17 +82,52 @@ def deploy(
         spec.executor_for_version or model_executor or
         (lambda v: _passthrough_executor)
     )
+    cluster = EdgeCluster(comm, flops_per_s=flops_per_s)
+    store = ArtifactStore(
+        store_root if store_root is not None
+        else tempfile.mkdtemp(prefix="seifer-deploy-")
+    )
+    return _build_deployment(
+        spec, graph, executor_for_version, cluster, store, positions,
+        version=version, flops_per_s=flops_per_s,
+    )
+
+
+def _build_deployment(
+    spec: DeploymentSpec,
+    graph,
+    executor_for_version,
+    cluster: EdgeCluster,
+    store: ArtifactStore,
+    positions,
+    *,
+    version: int,
+    flops_per_s: float,
+    nodes=None,
+    seed_offset: int = 0,
+) -> "Deployment":
+    """Bootstrap one deployment's control + serving stack on ``cluster``.
+
+    ``nodes`` restricts planning and placement to a hosting-node subset
+    (the tenancy scheduler's carve): plans are compiled on the subset's
+    ``subcluster`` view and every control plane is masked to it, so the
+    deployment can never place -- or be perturbed -- outside its slice.
+    ``seed_offset`` keeps per-tenant probe-noise streams distinct.
+    """
+    comm = cluster.comm
     if spec.autoscale is not None:
         return _deploy_autoscaled(
-            spec, graph, comm, positions, executor_for_version,
-            store_root=store_root, version=version, flops_per_s=flops_per_s,
+            spec, graph, executor_for_version, cluster, store, positions,
+            version=version, flops_per_s=flops_per_s,
+            nodes=nodes, seed_offset=seed_offset,
         )
+    view = comm if nodes is None else subcluster(comm, nodes, keep=(0,))
     rplan = None
     if spec.replicas != 1:
         # split the cluster BEFORE any probing: groups are decided on the
         # true bandwidths, each replica then bootstraps within its group
         rplan = Planner.from_spec(spec).plan_replicated(
-            graph, comm,
+            graph, view,
             replicas=spec.replicas, capacity=spec.capacity, version=version,
             dispatcher=0, device_flops=flops_per_s,
             compression_ratio=spec.compression_ratio,
@@ -88,18 +141,15 @@ def deploy(
             ),))
         if rplan.n_replicas == 1:
             rplan = None  # replicas="auto" chose a single pipeline
-    cluster = EdgeCluster(comm, flops_per_s=flops_per_s)
-    store = ArtifactStore(
-        store_root if store_root is not None
-        else tempfile.mkdtemp(prefix="seifer-deploy-")
-    )
     if rplan is None:
         control = ControlPlane(
             cluster, store,
             lambda v: graph, executor_for_version,
             planner=Planner.from_spec(spec),
             capacity=spec.capacity, compression_ratio=spec.compression_ratio,
-            seed=spec.seed,
+            seed=spec.seed + seed_offset,
+            allowed_nodes=None if nodes is None else set(nodes) | {0},
+            hosting_nodes=None if nodes is None else set(nodes),
         )
         control.bootstrap(version)
         dep = Deployment(spec, control, positions=positions)
@@ -112,7 +162,8 @@ def deploy(
                 planner=Planner.from_spec(spec),
                 capacity=spec.capacity,
                 compression_ratio=spec.compression_ratio,
-                seed=spec.seed + 7919 * r,  # distinct probe-noise streams
+                # distinct probe-noise streams per replica (and per tenant)
+                seed=spec.seed + seed_offset + 7919 * r,
                 allowed_nodes=set(group) | {0},
                 hosting_nodes=set(group),
             )
@@ -130,22 +181,26 @@ def deploy(
 def _deploy_autoscaled(
     spec: DeploymentSpec,
     graph,
-    comm,
-    positions,
     executor_for_version,
+    cluster: EdgeCluster,
+    store: ArtifactStore,
+    positions,
     *,
-    store_root: str | None,
     version: int,
     flops_per_s: float,
+    nodes=None,
+    seed_offset: int = 0,
 ) -> "Deployment":
     """Autoscaling path: plan the widest feasible replica split, activate
     ``min_replicas`` groups, park the rest as the autoscaler's standby pool."""
     from repro.cluster.autoscale import Autoscaler
 
+    comm = cluster.comm
+    view = comm if nodes is None else subcluster(comm, nodes, keep=(0,))
     auto = spec.autoscale
     plan_width = "max" if auto.max_replicas == "auto" else auto.max_replicas
     rplan = Planner.from_spec(spec).plan_replicated(
-        graph, comm,
+        graph, view,
         replicas=plan_width, capacity=spec.capacity, version=version,
         dispatcher=0, device_flops=flops_per_s,
         compression_ratio=spec.compression_ratio,
@@ -157,11 +212,6 @@ def _deploy_autoscaled(
             f"group(s) (max_replicas={auto.max_replicas!r}) but the planner "
             f"found {rplan.n_replicas if rplan.feasible else 0} on this cluster",
         ),))
-    cluster = EdgeCluster(comm, flops_per_s=flops_per_s)
-    store = ArtifactStore(
-        store_root if store_root is not None
-        else tempfile.mkdtemp(prefix="seifer-deploy-")
-    )
 
     def make_control(group, r: int) -> ControlPlane:
         # one control plane per replica slot; r indexes the *router's*
@@ -172,7 +222,7 @@ def _deploy_autoscaled(
             planner=Planner.from_spec(spec),
             capacity=spec.capacity,
             compression_ratio=spec.compression_ratio,
-            seed=spec.seed + 7919 * r,
+            seed=spec.seed + seed_offset + 7919 * r,
             allowed_nodes=set(group) | {0},
             hosting_nodes=set(group),
         )
@@ -455,7 +505,9 @@ class Deployment:
             "reconcile_actions": [a.kind for a in self.control.history],
             "serving": self.loop.metrics(),
         }
-        return out
+        from repro.cluster.serving import normalize_metrics
+
+        return normalize_metrics(out)
 
     def _replicated_metrics(self) -> dict:
         rset = self.replicaset
@@ -483,7 +535,9 @@ class Deployment:
                 ),
                 "reconcile_actions": [a.kind for a in control.history],
             })
-        return {
+        from repro.cluster.serving import normalize_metrics
+
+        return normalize_metrics({
             "version": plan.version,
             "n_nodes": self.cluster.n,
             "n_replicas": rset.n_replicas,
@@ -493,7 +547,7 @@ class Deployment:
             "predicted_throughput": plan.predicted_throughput,
             "replicas": replicas,
             "serving": self.loop.metrics(),
-        }
+        })
 
     def _check_slos(self) -> None:
         """SLOs re-checked on the as-deployed plan (probed bandwidths)."""

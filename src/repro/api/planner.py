@@ -129,6 +129,7 @@ def split_cluster(
     *,
     dispatcher: int | None = None,
     nodes: Sequence[int] | None = None,
+    targets: Sequence[int] | None = None,
 ) -> list[tuple[int, ...]]:
     """Partition the hosting nodes into ``n_replicas`` disjoint groups.
 
@@ -139,8 +140,13 @@ def split_cluster(
     group's members, keeping group sizes balanced (within one node).  The
     dispatcher node never joins a group; it is shared by every replica.
 
+    ``targets`` overrides the balanced sizing with one node count per group
+    (the tenancy scheduler's quota carve): group ``r`` stops growing at
+    ``targets[r]`` members, and when the targets sum to fewer than the
+    hosting nodes the leftovers stay ungrouped (spare capacity).
+
     Deterministic; raises ``ValueError`` when fewer hosting nodes than
-    replicas are available.
+    replicas are available or the targets cannot be honored.
     """
     hosting = [
         i for i in range(comm.n)
@@ -154,7 +160,19 @@ def split_cluster(
             f"cannot split {len(hosting)} hosting node(s) into "
             f"{n_replicas} replica group(s)"
         )
-    if n_replicas == 1:
+    if targets is not None:
+        targets = [int(t) for t in targets]
+        if len(targets) != n_replicas:
+            raise ValueError(
+                f"targets has {len(targets)} entries for "
+                f"{n_replicas} group(s)")
+        if any(t < 1 for t in targets):
+            raise ValueError("every group target must be >= 1")
+        if sum(targets) > len(hosting):
+            raise ValueError(
+                f"targets sum to {sum(targets)} but only "
+                f"{len(hosting)} hosting node(s) are available")
+    if n_replicas == 1 and targets is None:
         return [tuple(hosting)]
 
     bw = comm.bw
@@ -171,8 +189,9 @@ def split_cluster(
         )
         seeds.append(cand)
 
-    base, extra = divmod(len(hosting), n_replicas)
-    targets = [base + (1 if r < extra else 0) for r in range(n_replicas)]
+    if targets is None:
+        base, extra = divmod(len(hosting), n_replicas)
+        targets = [base + (1 if r < extra else 0) for r in range(n_replicas)]
     groups: list[list[int]] = [[s] for s in seeds]
     remaining = [i for i in hosting if i not in seeds]
     while remaining:
@@ -185,6 +204,8 @@ def split_cluster(
                 key = (score, -i, -r)
                 if best is None or key > best[0]:
                     best = (key, r, i)
+        if best is None:
+            break  # every group is at target; leftovers stay spare
         _, r, i = best
         groups[r].append(i)
         remaining.remove(i)

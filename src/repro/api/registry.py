@@ -14,17 +14,24 @@ Unknown names raise ``UnknownStrategyError`` carrying did-you-mean
 suggestions, so a typo in a spec fails at validation time with a readable
 message instead of deep inside placement.
 
-This module deliberately imports nothing from ``repro.core`` -- the core
-algorithm modules import *it* to self-register, and ``_ensure_registered``
-imports them lazily on first lookup so ``list_strategies`` works no matter
-which side was imported first.
+The table mechanics (defaults-first listing, duplicate rejection, lazy
+import of the registering modules, suggestion rendering) live in the shared
+``repro.core.registry`` helper; this module keeps the strategy-specific
+surface: the ``kind`` axis, the ``Strategy`` dataclass, and the historical
+error type and message format.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import difflib
 from typing import Callable
+
+from repro.core.registry import (
+    Registry,
+    UnknownNameError,
+    suggest,
+    unknown_message,
+)
 
 KINDS = ("partitioner", "placer", "joint")
 
@@ -43,48 +50,16 @@ class Strategy:
         return self.fn(*args, **kwargs)
 
 
-class UnknownStrategyError(KeyError):
+class UnknownStrategyError(UnknownNameError):
     """Raised for a name not in the registry; carries suggestions."""
 
     def __init__(self, kind: str, name: str, known: tuple[str, ...]):
-        self.kind = kind
-        self.name = name
-        self.known = known
-        self.suggestions = tuple(
-            difflib.get_close_matches(name, known, n=3, cutoff=0.4)
+        suggestions = suggest(name, known)
+        super().__init__(
+            unknown_message(f"{kind} strategy", name, known, suggestions),
+            name=name, known=known, suggestions=suggestions,
         )
-        msg = f"unknown {kind} strategy {name!r}; registered: {', '.join(known)}"
-        if self.suggestions:
-            msg += f" (did you mean {' or '.join(map(repr, self.suggestions))}?)"
-        super().__init__(msg)
-
-    def __str__(self) -> str:  # KeyError.__str__ repr-quotes; keep it readable
-        return self.args[0]
-
-
-_REGISTRY: dict[str, dict[str, Strategy]] = {kind: {} for kind in KINDS}
-_DEFAULTS: dict[str, str] = {}
-
-
-def register_strategy(
-    kind: str, name: str, *, default: bool = False, description: str = ""
-) -> Callable[[Callable], Callable]:
-    """Decorator: register ``fn`` as the ``kind`` strategy called ``name``."""
-    if kind not in KINDS:
-        raise ValueError(f"unknown strategy kind {kind!r}; one of {KINDS}")
-
-    def deco(fn: Callable) -> Callable:
-        if name in _REGISTRY[kind]:
-            raise ValueError(f"duplicate {kind} strategy {name!r}")
-        _REGISTRY[kind][name] = Strategy(kind, name, fn, description, default)
-        if default:
-            prior = _DEFAULTS.get(kind)
-            if prior is not None and prior != name:
-                raise ValueError(f"two defaults for {kind}: {prior!r}, {name!r}")
-            _DEFAULTS[kind] = name
-        return fn
-
-    return deco
+        self.kind = kind
 
 
 def _ensure_registered() -> None:
@@ -94,45 +69,59 @@ def _ensure_registered() -> None:
     import repro.core.placement  # noqa: F401
 
 
-def get_strategy(kind: str, name: str) -> Strategy:
-    """Look up a strategy by name; unknown names raise with suggestions."""
+_REGISTRIES: dict[str, Registry] = {
+    kind: Registry(
+        f"{kind} strategy",
+        ensure=_ensure_registered,
+        error=lambda name, known, kind=kind: UnknownStrategyError(
+            kind, name, known),
+    )
+    for kind in KINDS
+}
+
+
+def _registry(kind: str) -> Registry:
     if kind not in KINDS:
         raise ValueError(f"unknown strategy kind {kind!r}; one of {KINDS}")
-    _ensure_registered()
-    try:
-        return _REGISTRY[kind][name]
-    except KeyError:
-        raise UnknownStrategyError(kind, name, list_strategies(kind)) from None
+    return _REGISTRIES[kind]
+
+
+def register_strategy(
+    kind: str, name: str, *, default: bool = False, description: str = ""
+) -> Callable[[Callable], Callable]:
+    """Decorator: register ``fn`` as the ``kind`` strategy called ``name``."""
+    reg = _registry(kind)
+
+    def deco(fn: Callable) -> Callable:
+        reg.register(name, Strategy(kind, name, fn, description, default),
+                     default=default)
+        return fn
+
+    return deco
+
+
+def get_strategy(kind: str, name: str) -> Strategy:
+    """Look up a strategy by name; unknown names raise with suggestions."""
+    return _registry(kind).get(name)
 
 
 def list_strategies(kind: str) -> tuple[str, ...]:
     """Registered names for one kind, sorted (default first)."""
-    if kind not in KINDS:
-        raise ValueError(f"unknown strategy kind {kind!r}; one of {KINDS}")
-    _ensure_registered()
-    names = sorted(_REGISTRY[kind])
-    dflt = _DEFAULTS.get(kind)
-    if dflt in names:
-        names.remove(dflt)
-        names.insert(0, dflt)
-    return tuple(names)
+    return _registry(kind).names()
 
 
 def default_strategy(kind: str) -> str:
     """The name used when a spec leaves the strategy unset."""
-    if kind not in KINDS:
-        raise ValueError(f"unknown strategy kind {kind!r}; one of {KINDS}")
-    _ensure_registered()
-    return _DEFAULTS[kind]
+    return _registry(kind).default()
 
 
 def strategy_table() -> list[dict[str, str]]:
     """All registered strategies as rows (kind/name/default/description)."""
-    _ensure_registered()
     rows = []
     for kind in KINDS:
-        for name in list_strategies(kind):
-            s = _REGISTRY[kind][name]
+        reg = _registry(kind)
+        for name in reg.names():
+            s = reg.get(name)
             rows.append(
                 {
                     "kind": kind,

@@ -70,6 +70,10 @@ class Autoscaler:
         inside the target.
     cooldown_s:
         minimum virtual time between scale actions.
+    name:
+        optional label (the owning tenant under multi-tenant serving) --
+        each tenant's autoscaler scales only that tenant's standby budget,
+        and the label keys its events in cluster-wide metrics.
     """
 
     def __init__(
@@ -84,8 +88,10 @@ class Autoscaler:
         target_p99_s: float | None = None,
         cooldown_s: float = 0.5,
         window: int = 32,
+        name: str | None = None,
     ):
         self.make_control = make_control
+        self.name = name
         self.standby: list[tuple[int, ...]] = [
             tuple(sorted(g)) for g in standby_groups]
         self.min_replicas = int(min_replicas)
@@ -184,6 +190,7 @@ class Autoscaler:
     # -- reporting -----------------------------------------------------------
     def metrics(self) -> dict:
         return {
+            "name": self.name,
             "min_replicas": self.min_replicas,
             "max_replicas": self.max_replicas,
             "backlog_high": self.backlog_high,

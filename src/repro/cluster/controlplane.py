@@ -217,6 +217,22 @@ class ControlPlane:
         """Enqueue an observation; convergence happens at ``reconcile()``."""
         self._events.append(event)
 
+    def owned_nodes(self) -> set[int] | None:
+        """Nodes within this control plane's view (``None`` = unmasked,
+        the whole cluster).  Tenant- and replica-scoped event routing
+        delivers a node's churn only to the planes that own it."""
+        allowed = self.dispatcher.allowed_nodes
+        return None if allowed is None else set(allowed)
+
+    def adopt_node(self, node_id: int) -> None:
+        """Extend a masked view by one node (tenancy/replica-set growth);
+        a no-op for unmasked planes, which already see everything."""
+        disp = self.dispatcher
+        if disp.allowed_nodes is not None:
+            disp.allowed_nodes.add(node_id)
+        if disp.hosting_nodes is not None:
+            disp.hosting_nodes.add(node_id)
+
     @property
     def pending(self) -> int:
         return len(self._events)
@@ -471,6 +487,17 @@ class ReplicaSet:
     def observed(self) -> tuple[ObservedState, ...]:
         return tuple(c.observed() for c in self.controls)
 
+    def owned_nodes(self) -> set[int] | None:
+        """Union of the live replicas' views (+ the shared dispatcher);
+        ``None`` when any live replica is unmasked."""
+        out = {self.dispatcher_node}
+        for r in self.live_indices():
+            allowed = self.controls[r].dispatcher.allowed_nodes
+            if allowed is None:
+                return None
+            out |= set(allowed)
+        return out
+
     def deployed_plan(self) -> ReplicatedPlan:
         """The as-deployed aggregate: live replicas' current plans."""
         live = self.live_indices()
@@ -566,11 +593,7 @@ class ReplicaSet:
 
     def _adopt(self, r: int, node_id: int) -> None:
         self.groups[r].add(node_id)
-        disp = self.controls[r].dispatcher
-        if disp.allowed_nodes is not None:
-            disp.allowed_nodes.add(node_id)
-        if disp.hosting_nodes is not None:
-            disp.hosting_nodes.add(node_id)
+        self.controls[r].adopt_node(node_id)
 
     # -- rolling version bumps ----------------------------------------------
     def advance_rollout(self) -> None:

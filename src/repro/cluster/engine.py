@@ -49,7 +49,7 @@ import jax.numpy as jnp
 from repro.cluster.controlplane import ControlPlane, ReconcileAction, ReplicaSet
 from repro.cluster.events import NodeFailed
 from repro.cluster.lifecycle import Pod
-from repro.cluster.serving import Request, latency_report
+from repro.cluster.serving import Request, latency_report, normalize_metrics
 from repro.core.bottleneck import service_times
 
 _ALL = "all"  # sentinel: every stage is affected (version bump, restart)
@@ -284,10 +284,14 @@ class PipelinedServingLoop:
 
     # -- metrics ---------------------------------------------------------------
     def metrics(self) -> dict:
-        """Serving counters + per-stage occupancy/queue statistics."""
+        """Serving counters + per-stage occupancy/queue statistics.
+
+        The payload is normalized (``serving.normalize_metrics``): string
+        keys everywhere, native Python numbers, JSON round-trip stable.
+        """
         done = len(self.completed)
         t = self.clock_s
-        return {
+        return normalize_metrics({
             "mode": "pipelined",
             "completed": done,
             "failed": len(self.failed),
@@ -338,7 +342,7 @@ class PipelinedServingLoop:
                 }
                 for st in self._stages
             ],
-        }
+        })
 
     def steady_state_throughput(self, skip_frac: float = 0.5) -> float:
         """Requests/s over the tail of the completions (fill/drain excluded).
@@ -1034,7 +1038,7 @@ class ReplicatedServingLoop:
         }
         if self.autoscaler is not None:
             out["autoscaler"] = self.autoscaler.metrics()
-        return out
+        return normalize_metrics(out)
 
     def steady_state_throughput(self, skip_frac: float = 0.5) -> float:
         """Aggregate requests/s: the sum of the live replicas' steady-state

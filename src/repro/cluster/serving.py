@@ -53,6 +53,8 @@ class Request:
     admit-to-complete latency, queueing included.  ``slo_class`` names the
     request's latency class (``None`` = unclassified); ``priority`` orders
     continuous-batch admission (higher first, FIFO within a class).
+    ``tenant`` is stamped by the tenancy router under multi-tenant serving
+    (``None`` for single-tenant deployments).
     """
 
     req_id: int
@@ -64,6 +66,7 @@ class Request:
     replica: int | None = None
     slo_class: str | None = None
     priority: int = 0
+    tenant: str | None = None
 
     @property
     def done(self) -> bool:
@@ -126,6 +129,34 @@ def latency_report(requests, class_targets: dict | None = None) -> dict:
         classes[name] = entry
     return {"overall": latency_stats(r for r in requests if r.done),
             "classes": classes}
+
+
+def normalize_metrics(payload):
+    """Canonical metrics payload: the JSON round-trip identity.
+
+    Every mapping key is coerced to ``str`` (some sub-dicts -- per-replica,
+    per-link, per-tenant -- were historically keyed by whatever the
+    producer used, so ints and stringified ints could coexist in one
+    payload), tuples become lists, and numpy scalars become native Python
+    numbers.  Applied once at the metrics facades (``Deployment.metrics``,
+    the engines, the tenancy router), so ``json.loads(json.dumps(m)) == m``
+    holds for every metrics dict the benchmarks persist.
+    """
+    if isinstance(payload, dict):
+        return {str(k): normalize_metrics(v) for k, v in payload.items()}
+    if isinstance(payload, (list, tuple)):
+        return [normalize_metrics(v) for v in payload]
+    if isinstance(payload, bool) or payload is None:
+        return payload
+    if isinstance(payload, (int, float, str)):
+        return payload
+    import numpy as _np
+
+    if isinstance(payload, _np.integer):
+        return int(payload)
+    if isinstance(payload, _np.floating):
+        return float(payload)
+    return payload
 
 
 class ServingLoop:

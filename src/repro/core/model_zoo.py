@@ -191,3 +191,65 @@ def demo_mlp(d: int = 32, n_layers: int = 8):
         )
 
     return graph, executor_for_version
+
+
+def demo_ssm(d: int = 24, n_layers: int = 6, seq: int = 8, heads: int = 2,
+             state: int = 4):
+    """An executable state-space demo model (Mamba2-style mixing layers).
+
+    The multi-tenant tests/benchmarks need a second small model whose layer
+    shapes genuinely differ from ``demo_mlp`` -- same ``(graph,
+    executor_for_version)`` contract, but each layer is a selective-state
+    scan riding the ``kernels/ssm_scan`` reference path (``ssd_chunked``
+    with ``use_pallas=False``): input/output projections plus the chunked
+    SSD recurrence, with a residual + tanh around it.  Activations flow
+    between layers as ``(seq, d)`` float32, so ``out_bytes = seq * d * 4``
+    and per-layer params are the B/C/dt projections -- both distinct from
+    the MLP's ``d x d`` blocks.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.graph import chain
+    from repro.kernels.ssm_scan.ops import ssd_chunked
+    from repro.runtime.pipeline import make_layer_executor
+
+    if d % heads != 0:
+        raise ValueError(f"d={d} must be divisible by heads={heads}")
+    dh = d // heads
+    act_bytes = seq * d * ACT_BYTES
+    # per-layer params: Wb/Wc (d x state each) + Wdt (d x heads) + a (heads)
+    param_bytes = (2 * d * state + d * heads + heads) * 4
+    graph = chain(
+        f"ssm{n_layers}", [(param_bytes, act_bytes)] * n_layers,
+        in_bytes=act_bytes,
+    )
+
+    def executor_for_version(version: int):
+        key = jax.random.fold_in(jax.random.PRNGKey(version), 0x55D)
+        kb, kc, kd = jax.random.split(key, 3)
+        wb = np.asarray(jax.random.normal(kb, (n_layers, d, state)) * 0.3)
+        wc = np.asarray(jax.random.normal(kc, (n_layers, d, state)) * 0.3)
+        wd = np.asarray(jax.random.normal(kd, (n_layers, d, heads)) * 0.3)
+        a = np.full((heads,), -0.5, np.float32)
+
+        def layer(x, i):
+            # batch-polymorphic like demo_mlp: the serving engine stacks a
+            # microbatch onto a leading axis, so fold any leading dims into
+            # ssd_chunked's batch dim and restore the caller's shape after
+            x = jnp.asarray(x, jnp.float32)
+            xb = x.reshape(-1, seq, d)
+            n = xb.shape[0]
+            xs = xb.reshape(n, seq, heads, dh)
+            bm = xb @ wb[i]
+            cm = xb @ wc[i]
+            dt = jax.nn.softplus(xb @ wd[i])
+            y = ssd_chunked(xs, bm, cm, dt, jnp.asarray(a), chunk=seq)
+            return jnp.tanh(xb + y.reshape(n, seq, d)).reshape(x.shape)
+
+        return make_layer_executor(
+            [lambda x, i=i: layer(x, i) for i in range(n_layers)]
+        )
+
+    return graph, executor_for_version

@@ -15,40 +15,44 @@ Unknown names raise ``UnknownCodecError`` carrying did-you-mean suggestions,
 so a typo in a spec fails at validation time with a readable message instead
 of deep inside the serving engine.
 
-Like the strategy registry, this module deliberately imports nothing from
-the codec implementations -- ``dataplane/codecs.py`` imports *it* to
-self-register, and ``_ensure_registered`` imports that module lazily on
-first lookup so ``list_codecs`` works no matter which side was imported
-first.
+The table mechanics are the shared ``repro.core.registry`` helper; this
+module keeps the codec-specific surface (instance storage, the ``auto``
+sentinel, and the historical error type).
 """
 
 from __future__ import annotations
 
-import difflib
+from repro.core.registry import (
+    Registry,
+    UnknownNameError,
+    suggest,
+    unknown_message,
+)
 
 AUTO = "auto"  # spec sentinel: the planner picks the codec per link
 
 
-class UnknownCodecError(KeyError):
+class UnknownCodecError(UnknownNameError):
     """Raised for a codec name not in the registry; carries suggestions."""
 
     def __init__(self, name: str, known: tuple[str, ...]):
-        self.name = name
-        self.known = known
-        self.suggestions = tuple(
-            difflib.get_close_matches(name, known, n=3, cutoff=0.4)
+        suggestions = suggest(name, known)
+        super().__init__(
+            unknown_message("codec", name, known, suggestions),
+            name=name, known=known, suggestions=suggestions,
         )
-        msg = f"unknown codec {name!r}; registered: {', '.join(known)}"
-        if self.suggestions:
-            msg += f" (did you mean {' or '.join(map(repr, self.suggestions))}?)"
-        super().__init__(msg)
-
-    def __str__(self) -> str:  # KeyError.__str__ repr-quotes; keep it readable
-        return self.args[0]
 
 
-_REGISTRY: dict[str, "object"] = {}
-_DEFAULT: list[str] = []
+def _ensure_registered() -> None:
+    """Import the codec module so its decorators have run."""
+    import repro.dataplane.codecs  # noqa: F401
+
+
+_REGISTRY = Registry(
+    "codec",
+    ensure=_ensure_registered,
+    error=UnknownCodecError,
+)
 
 
 def register_codec(name: str, *, default: bool = False):
@@ -60,60 +64,37 @@ def register_codec(name: str, *, default: bool = False):
     """
 
     def deco(cls):
-        if name in _REGISTRY:
-            raise ValueError(f"duplicate codec {name!r}")
         inst = cls()
         inst.name = name
-        _REGISTRY[name] = inst
-        if default:
-            if _DEFAULT and _DEFAULT[0] != name:
-                raise ValueError(
-                    f"two default codecs: {_DEFAULT[0]!r}, {name!r}")
-            _DEFAULT[:] = [name]
+        _REGISTRY.register(name, inst, default=default)
         return cls
 
     return deco
 
 
-def _ensure_registered() -> None:
-    """Import the codec module so its decorators have run."""
-    import repro.dataplane.codecs  # noqa: F401
-
-
 def get_codec(name: str):
     """Look up a codec by name; unknown names raise with suggestions."""
-    _ensure_registered()
-    try:
-        return _REGISTRY[name]
-    except KeyError:
-        raise UnknownCodecError(name, list_codecs()) from None
+    return _REGISTRY.get(name)
 
 
 def list_codecs() -> tuple[str, ...]:
     """Registered codec names, sorted (default first)."""
-    _ensure_registered()
-    names = sorted(_REGISTRY)
-    if _DEFAULT and _DEFAULT[0] in names:
-        names.remove(_DEFAULT[0])
-        names.insert(0, _DEFAULT[0])
-    return tuple(names)
+    return _REGISTRY.names()
 
 
 def default_codec() -> str:
     """The codec used when a spec leaves ``codec`` unset."""
-    _ensure_registered()
-    return _DEFAULT[0]
+    return _REGISTRY.default()
 
 
 def codec_table() -> list[dict[str, str]]:
     """All registered codecs as rows (name/ratio/error/description)."""
-    _ensure_registered()
     rows = []
     for name in list_codecs():
-        c = _REGISTRY[name]
+        c = _REGISTRY.get(name)
         rows.append({
             "name": name,
-            "default": "yes" if _DEFAULT and _DEFAULT[0] == name else "",
+            "default": "yes" if default_codec() == name else "",
             "wire_ratio_f32": f"{c.wire_ratio():.3f}",
             "error_bound": f"{c.error_bound:.3g}",
             "description": type(c).__doc__.splitlines()[0] if type(c).__doc__ else "",

@@ -29,11 +29,17 @@ unknown name fails fast with suggestions and the CLI/spec can enumerate them.
 from __future__ import annotations
 
 import dataclasses
-import difflib
 import zlib
 from typing import Callable, Mapping, Sequence
 
 import numpy as np
+
+from repro.core.registry import (
+    Registry,
+    UnknownNameError,
+    suggest,
+    unknown_message,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,42 +84,43 @@ class Trace:
 # Registry
 # ---------------------------------------------------------------------------
 
-_TRACES: dict[str, Callable] = {}
-
-
-class UnknownTraceError(KeyError):
+class UnknownTraceError(UnknownNameError):
     """Trace name not registered; message lists near-misses + all names."""
 
     def __init__(self, name: str):
         known = list_traces()
-        close = difflib.get_close_matches(name, known, n=3, cutoff=0.4)
-        hint = f" -- did you mean {', '.join(repr(c) for c in close)}?" if close else ""
+        suggestions = suggest(name, known)
         super().__init__(
-            f"unknown trace {name!r}{hint} (registered: {', '.join(known)})"
+            unknown_message("trace", name, known, suggestions, style="inline"),
+            name=name, known=known, suggestions=suggestions,
         )
-        self.name = name
-        self.suggestions = tuple(close)
+
+
+# Generators live in this module, so no lazy-import hook is needed; the
+# registry historically allows re-registration (overwrite) for traces.
+_TRACES = Registry(
+    "trace",
+    error=lambda name, known: UnknownTraceError(name),
+    allow_overwrite=True,
+)
 
 
 def register_trace(name: str):
     """Register ``fn(rate, duration_s, rng) -> iterable of arrival times``."""
 
     def deco(fn):
-        _TRACES[name] = fn
+        _TRACES.register(name, fn)
         return fn
 
     return deco
 
 
 def list_traces() -> tuple[str, ...]:
-    return tuple(sorted(_TRACES))
+    return _TRACES.names()
 
 
 def get_trace_generator(name: str) -> Callable:
-    try:
-        return _TRACES[name]
-    except KeyError:
-        raise UnknownTraceError(name) from None
+    return _TRACES.get(name)
 
 
 # ---------------------------------------------------------------------------

@@ -128,6 +128,66 @@ def test_latency_pareto_benchmark_emits_a_valid_canonical_artifact(
     assert payload["serving"]["max_batch"] >= 1
 
 
+def test_multi_tenant_benchmark_emits_a_valid_canonical_artifact(
+        tmp_path, monkeypatch):
+    """End to end: the multi-tenant benchmark writes one schema-valid BENCH_
+    artifact whose claims pin the tenancy acceptance criteria -- each
+    co-located tenant >= 70% of its solo throughput, and churn on one
+    tenant's slice moving the other's completion cadence < 5%."""
+    from benchmarks import multi_tenant
+
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path)
+    multi_tenant.run(requests=24)
+    (path,) = tmp_path.iterdir()
+    assert path.name == f"{ARTIFACT_PREFIX}multi_tenant.json"
+    payload = json.loads(path.read_text())
+    validate_payload(path.stem, payload)
+    assert {r["tenant"] for r in payload["rows"]} == {"alpha", "beta"}
+    assert payload["claims"]["min_retention"] >= 0.70
+    assert payload["claims"]["beta_cadence_drift"] <= 0.05
+    assert payload["claims"]["alpha_replanned"] is True
+    assert payload["claims"]["beta_untouched"] is True
+    assert payload["cluster"]["policy"] == "partition"
+
+
+def test_deployment_metrics_are_normalized_json(tmp_path):
+    """The metrics facades run through ``normalize_metrics``: every dict key
+    is a str and the whole payload survives a strict-JSON round trip
+    unchanged -- pinned here so artifact consumers can rely on the schema."""
+    from repro.api import ClusterSpec, DeploymentSpec, deploy
+    from repro.cluster.serving import normalize_metrics
+
+    spec = DeploymentSpec(
+        model="demo_mlp",
+        cluster=ClusterSpec(n_nodes=8, capacity_bytes=11_000, seed=0),
+    )
+    d = deploy(spec, store_root=str(tmp_path))
+    import jax.numpy as jnp
+
+    for _ in range(4):
+        d.submit(jnp.ones((32,)) * 0.1)
+    d.drain()
+    m = d.metrics()
+
+    def walk(value, where="$"):
+        if isinstance(value, dict):
+            for k, v in value.items():
+                assert isinstance(k, str), f"non-str key {k!r} at {where}"
+                walk(v, f"{where}.{k}")
+        elif isinstance(value, list):
+            for i, v in enumerate(value):
+                walk(v, f"{where}[{i}]")
+        else:
+            assert isinstance(value, (str, int, float, bool, type(None))), (
+                f"non-JSON leaf {type(value).__name__} at {where}")
+
+    walk(m)
+    # strict JSON round trip is the identity on a normalized payload
+    assert json.loads(json.dumps(m, allow_nan=False)) == m
+    # normalization is idempotent
+    assert normalize_metrics(m) == m
+
+
 def test_every_benchmark_declares_its_artifact_name():
     """run.py (and the CI upload step) resolve artifact paths through each
     module's ARTIFACT constant -- the single source of the basename."""
@@ -135,8 +195,8 @@ def test_every_benchmark_declares_its_artifact_name():
 
     for mod in ("algo_scaling", "approx_ratio", "bandwidth_sweep",
                 "churn_throughput", "fig3_bottleneck", "joint_opt",
-                "kernel_bench", "latency_pareto", "replica_scaling",
-                "throughput_scaling"):
+                "kernel_bench", "latency_pareto", "multi_tenant",
+                "replica_scaling", "throughput_scaling"):
         m = importlib.import_module(f"benchmarks.{mod}")
         assert isinstance(m.ARTIFACT, str) and m.ARTIFACT, mod
 

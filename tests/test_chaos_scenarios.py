@@ -447,3 +447,162 @@ def test_saturation_kill_under_overload(seed):
     # autoscaler record explains every capacity move
     assert dep.replicaset.live_indices()
     assert m["autoscaler"]["grows"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Tenant isolation: churn on one tenant's slice must not touch the others
+# ---------------------------------------------------------------------------
+
+TEN_HOSTING = 12
+TEN_CAPACITY = 1.05e6  # alpha: 2 layers/node (4 stages), beta: 1/node (6)
+
+
+def _tenant_deployment(seed, *, policy="partition", explicit_fractions=True):
+    """Two heterogeneous synthetic tenants on one symmetric shared cluster
+    (passthrough math: isolation is a pure control/timing-model property)."""
+    from repro.api import TenantSpec
+    from repro.core.graph import Layer, LayerGraph
+    from repro.core.placement import CommGraph
+
+    def graph(name, n_layers, param_bytes):
+        layers = tuple(
+            Layer(f"{name}{i}", param_bytes=param_bytes, out_bytes=100_000,
+                  flops=5_000_000)
+            for i in range(n_layers)
+        )
+        return LayerGraph(name, layers, in_bytes=50_000)
+
+    bw = np.full((TEN_HOSTING + 1, TEN_HOSTING + 1), 20e6)
+    np.fill_diagonal(bw, 0.0)
+    caps = np.full(TEN_HOSTING + 1, TEN_CAPACITY)
+    caps[0] = -1.0  # dispatcher hosts no partition
+    comm = CommGraph(bw=bw, node_capacity=caps)
+
+    def spec(g):
+        return DeploymentSpec(
+            model=g, cluster=ClusterSpec(comm=comm), capacity=TEN_CAPACITY,
+            seed=seed, microbatch=1)
+
+    frac = 0.5 if explicit_fractions else None
+    return deploy([
+        TenantSpec("alpha", spec(graph("a", 8, 500_000)),
+                   capacity_fraction=frac),
+        TenantSpec("beta", spec(graph("b", 6, 700_000)),
+                   capacity_fraction=frac),
+    ], policy=policy)
+
+
+def _loop_conserved(loop, submitted_ids):
+    everywhere = (
+        [r.req_id for r in loop.completed]
+        + [r.req_id for r in loop.failed]
+        + [r.req_id for r in loop.queue]
+        + [r.req_id for mb in loop._inflight for r in mb.requests]
+    )
+    assert len(everywhere) == len(set(everywhere)), "request duplicated"
+    assert sorted(everywhere) == sorted(submitted_ids), "request lost"
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_tenant_isolation_churn_on_one_slice(seed):
+    """Randomized fail/heal churn confined to tenant alpha's slice: beta's
+    pipeline identity, link timings, and completion cadence are untouched,
+    and per-tenant request conservation holds throughout."""
+    d = _tenant_deployment(seed)
+    rng = np.random.default_rng(seed * 6151 + 11)
+    n = 48
+    ids = {name: [d.submit(name, i).req_id for i in range(n)]
+           for name in ("alpha", "beta")}
+
+    beta = d.router.loop("beta")
+    pre_pipe = beta._bound_pipeline
+    pre_link = list(beta._link_s)
+    alpha_nodes = set(d.nodes_for("alpha"))
+
+    fired = []
+    failed = set()
+    churn_clock = None
+    steps = 0
+    while d.router.backlog:
+        steps += 1
+        assert steps < 20_000, "tenant scenario did not drain"
+        if len(fired) < 6 and rng.random() < 0.15:
+            if failed and rng.random() < 0.5:
+                node = failed.pop()
+                d.inject(NodeJoined(node_id=node))
+                fired.append(f"heal {node}")
+            else:
+                full_path = d.deployment("alpha").observed().path
+                path = [p for p in full_path if p not in failed]
+                # events reconcile lazily (FIFO, each against the state the
+                # previous one left), so bound concurrent failures by the
+                # healthy-node count against the FULL stage count -- the
+                # filtered path understates how many survivors the pipeline
+                # needs when the observed path is stale
+                if path and len(alpha_nodes - failed) - 1 >= len(full_path):
+                    victim = int(path[int(rng.integers(len(path)))])
+                    d.inject(NodeFailed(victim))
+                    failed.add(victim)
+                    fired.append(f"fail {victim}")
+            if fired and churn_clock is None:
+                churn_clock = beta.clock_s
+        d.step()
+        for name in ("alpha", "beta"):
+            _loop_conserved(d.router.loop(name), ids[name])
+    d.reconcile()
+    assert fired, "no churn was injected on alpha's slice"
+
+    # every event was routed to alpha alone -- beta never heard a thing
+    assert {t for t, _ in d.controlplane.routed} == {"alpha"}
+    assert beta._requeues == 0
+    assert beta._bound_pipeline is pre_pipe, "beta was rebound"
+    assert list(beta._link_s) == pre_link, "beta timings changed"
+    assert d.deployment("beta").control.history == []
+
+    # both tenants completed everything; alpha stayed inside its slice
+    for name in ("alpha", "beta"):
+        loop = d.router.loop(name)
+        assert len(loop.completed) == n and not loop.failed
+    obs_a = d.deployment("alpha").observed()
+    assert obs_a.healthy and set(obs_a.path) <= alpha_nodes
+
+    # beta's measured cadence is unchanged across the churn (within 5%)
+    pre = _window_rate(beta.completed, 0.0, churn_clock)
+    post = _window_rate(beta.completed, churn_clock, float("inf"))
+    if pre is not None and post is not None:
+        assert post == pytest.approx(pre, rel=0.05)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_tenant_shared_policy_churn_reaches_every_cohost(seed):
+    """Under the ``shared`` policy tenants co-reside on the same nodes, so a
+    node kill must reach EVERY tenant hosting it -- both re-plan, and
+    per-tenant conservation still holds through the disturbance."""
+    d = _tenant_deployment(seed, policy="shared", explicit_fractions=False)
+    n = 32
+    ids = {name: [d.submit(name, i).req_id for i in range(n)]
+           for name in ("alpha", "beta")}
+    while len(d.completed()) < n // 2:
+        d.step()
+
+    victim = int(d.deployment("alpha").observed().path[0])
+    d.inject(NodeFailed(victim))
+    steps = 0
+    while d.router.backlog or d.pending:
+        steps += 1
+        assert steps < 20_000, "shared scenario did not drain"
+        if not d.step() and d.pending:
+            d.reconcile()
+        for name in ("alpha", "beta"):
+            _loop_conserved(d.router.loop(name), ids[name])
+
+    # the event fanned out to every co-hosting tenant
+    assert set(d.controlplane.routed) >= {
+        ("alpha", "NodeFailed"), ("beta", "NodeFailed")}
+    for name in ("alpha", "beta"):
+        loop = d.router.loop(name)
+        assert len(loop.completed) == n and not loop.failed
+        obs = d.deployment(name).observed()
+        assert obs.healthy and victim not in obs.path
+        assert d.deployment(name).control.history, (
+            f"tenant {name} never reconciled the shared-node kill")
