@@ -1,6 +1,20 @@
 """Partitioning/placement wall-time scaling (production readiness: the
 dispatcher re-runs these on every failure/redeploy, so they must be fast at
-fleet-scale node counts)."""
+fleet-scale node counts).
+
+The placement sweep runs two placers side by side:
+
+  * ``flat``          -- the full-graph color-coding binary search, capped at
+                         ``flat_cap`` nodes where it already costs seconds;
+  * ``hierarchical``  -- the >64-node default path (bandwidth-tiered groups,
+                         coarse DP over group representatives, exact-DP
+                         refinement inside the winners), swept to 1024 nodes.
+
+The payload carries ``claims`` asserting the hierarchical path scales
+near-linearly: time at the largest node count over time at the reference
+count (128 in the default sweep, an 8x node growth) stays under
+``SCALING_RATIO_MAX`` (~12x allows n log n slack).
+"""
 
 from __future__ import annotations
 
@@ -8,46 +22,88 @@ import numpy as np
 
 from repro.core.graph import chain
 from repro.core.partitioner import partition_min_bottleneck
-from repro.core.placement import place_color_coding
+from repro.core.placement import place_color_coding, place_hierarchical
 from repro.core.simulate import random_cluster
 
 from benchmarks.common import save, table, timer
 
 ARTIFACT = "algo_scaling"  # results/BENCH_algo_scaling.json
 
+FLAT_NODE_CAP = 128  # flat color coding is already ~2.5s here; don't sweep past
+SCALING_RATIO_MAX = 12.0  # hierarchical: time(1024)/time(128) ceiling (8x nodes)
+HIER_REF_NODES = 128  # near-linearity reference point
 
-def run(seed: int = 0) -> dict:
+
+def run(
+    seed: int = 0,
+    partition_layers: tuple = (64, 256, 1024, 4096),
+    placement_nodes: tuple = (16, 32, 64, 128, 256, 512, 1024),
+    flat_cap: int = FLAT_NODE_CAP,
+) -> dict:
     rng = np.random.default_rng(seed)
     rows = []
     # partitioner: layers sweep
-    for n_layers in (64, 256, 1024, 4096):
+    for n_layers in partition_layers:
         sizes = [(int(rng.integers(1e5, 1e7)), int(rng.integers(1e4, 1e6)))
                  for _ in range(n_layers)]
         g = chain(f"synth{n_layers}", sizes)
         cap = g.total_param_bytes // 10
         with timer() as t:
             res = partition_min_bottleneck(g, cap)
-        rows.append({"stage": "partition", "size": n_layers,
-                     "time_ms": t.s * 1e3, "parts": res.n_parts,
-                     "feasible": res.feasible})
-    # placement: node sweep (color coding, beyond the exact-DP limit)
+        rows.append({"stage": "partition", "algo": "min_bottleneck",
+                     "size": n_layers, "time_ms": t.s * 1e3,
+                     "parts": res.n_parts, "feasible": res.feasible})
+    # placement: node sweep, flat color coding vs hierarchical large-n path
     g = chain("synth64", [(int(rng.integers(1e5, 1e7)), int(rng.integers(1e4, 1e6)))
                           for _ in range(64)])
-    for n_nodes in (16, 32, 64, 128):
+    part = partition_min_bottleneck(g, g.total_param_bytes // 6, max_parts=8)
+    boundaries = list(part.boundaries)
+    part_bytes = [p.param_bytes for p in part.partitions]
+    hier_ms: dict[int, float] = {}
+    for n_nodes in placement_nodes:
         comm = random_cluster(n_nodes, g.total_param_bytes // 6, seed=seed)
-        part = partition_min_bottleneck(g, g.total_param_bytes // 6, max_parts=8)
-        with timer() as t:
-            res = place_color_coding(
-                list(part.boundaries), [p.param_bytes for p in part.partitions],
-                comm, n_classes=4, exact_limit=0, trials=40,
-            )
-        rows.append({"stage": "placement", "size": n_nodes,
-                     "time_ms": t.s * 1e3, "parts": len(part.partitions),
-                     "feasible": res.feasible})
-    payload = {"rows": rows}
+        if n_nodes <= flat_cap:
+            with timer() as t:
+                res = place_color_coding(
+                    boundaries, part_bytes, comm,
+                    n_classes=4, exact_limit=0, trials=40,
+                    hierarchical_limit=None,
+                )
+            rows.append({"stage": "placement", "algo": "flat",
+                         "size": n_nodes, "time_ms": t.s * 1e3,
+                         "parts": len(part_bytes), "feasible": res.feasible})
+        if n_nodes >= 64:
+            # warm numpy/lru caches out-of-band so the row measures the
+            # algorithm, not first-call table construction
+            place_hierarchical(boundaries, part_bytes, comm, seed=seed)
+            with timer() as t:
+                res = place_hierarchical(
+                    boundaries, part_bytes, comm, n_classes=4, seed=seed,
+                )
+            hier_ms[n_nodes] = t.s * 1e3
+            rows.append({"stage": "placement", "algo": "hierarchical",
+                         "size": n_nodes, "time_ms": t.s * 1e3,
+                         "parts": len(part_bytes), "feasible": res.feasible})
+            assert res.feasible, f"hierarchical infeasible at n={n_nodes}"
+    n_hi = max(hier_ms)
+    n_ref = HIER_REF_NODES if HIER_REF_NODES in hier_ms else min(hier_ms)
+    claims = {
+        "hier_nodes_hi": n_hi,
+        "hier_nodes_ref": n_ref,
+        "hier_time_hi_ms": hier_ms[n_hi],
+        "hier_time_ref_ms": hier_ms[n_ref],
+        "hier_ratio": hier_ms[n_hi] / max(hier_ms[n_ref], 1e-9),
+        "scaling_ratio_max": SCALING_RATIO_MAX,
+    }
+    payload = {"rows": rows, "claims": claims}
     save(ARTIFACT, payload)
-    print(table(rows, ["stage", "size", "time_ms", "parts"],
+    print(table(rows, ["stage", "algo", "size", "time_ms", "parts"],
                 "Algorithm wall-time scaling"))
+    print(f"claims: {claims}")
+    assert claims["hier_ratio"] <= SCALING_RATIO_MAX, (
+        f"hierarchical placement is not near-linear: "
+        f"time({n_hi})/time({n_ref}) = {claims['hier_ratio']:.1f}x"
+    )
     return payload
 
 

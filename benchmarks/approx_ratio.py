@@ -2,7 +2,16 @@
 
 On clusters small enough for the exact subset-DP on TRUE bandwidths, compare
 the SEIFER pipeline (quantized bandwidth classes + color coding) against the
-optimum, across class granularities."""
+optimum, across class granularities -- and pin the hierarchical large-n
+placer's quality against the same oracle.  The hierarchical rows force tiny
+``group_size`` values so even an 8-node cluster splits into multiple groups
+and the coarse-DP-over-representatives path is genuinely exercised (at the
+default group size these clusters would be solved flat).
+
+``claims`` bound the hierarchical degradation: mean ratio over every
+(model, group_size) cell stays under ``HIER_MEAN_RATIO_MAX`` and no single
+trial exceeds ``HIER_WORST_RATIO_MAX``.
+"""
 
 from __future__ import annotations
 
@@ -10,12 +19,15 @@ import numpy as np
 
 from repro.core.model_zoo import PAPER_MODELS
 from repro.core.partitioner import partition_min_bottleneck
-from repro.core.placement import place_color_coding, place_optimal
+from repro.core.placement import place_color_coding, place_hierarchical, place_optimal
 from repro.core.simulate import random_cluster
 
 from benchmarks.common import save, table
 
 ARTIFACT = "approx_ratio"  # results/BENCH_approx_ratio.json
+
+HIER_MEAN_RATIO_MAX = 2.0  # per-cell mean bottleneck vs exact subset-DP
+HIER_WORST_RATIO_MAX = 4.0  # any single trial
 
 
 def run(trials: int = 24, n_nodes: int = 8, capacity_frac: float = 0.3, seed: int = 0) -> dict:
@@ -41,16 +53,48 @@ def run(trials: int = 24, n_nodes: int = 8, capacity_frac: float = 0.3, seed: in
             if ratios:
                 rows.append({
                     "model": model,
+                    "algo": "color_coding",
                     "classes": classes if classes else "inf",
                     "mean_ratio": float(np.mean(ratios)),
                     "p95_ratio": float(np.quantile(ratios, 0.95)),
                     "max_ratio": float(np.max(ratios)),
                     "n": len(ratios),
                 })
-    payload = {"rows": rows, "n_nodes": n_nodes, "capacity_frac": capacity_frac}
+        for group_size in (3, 4):
+            ratios = []
+            for t in range(trials):
+                comm = random_cluster(n_nodes, capacity, seed=seed + 97 * t)
+                opt = place_optimal(weights, sizes, comm)
+                alg = place_hierarchical(weights, sizes, comm, n_classes=4,
+                                         seed=t, group_size=group_size)
+                if opt.feasible and alg.feasible and opt.bottleneck_latency > 0:
+                    ratios.append(alg.bottleneck_latency / opt.bottleneck_latency)
+            if ratios:
+                rows.append({
+                    "model": model,
+                    "algo": f"hierarchical(g={group_size})",
+                    "classes": 4,
+                    "mean_ratio": float(np.mean(ratios)),
+                    "p95_ratio": float(np.quantile(ratios, 0.95)),
+                    "max_ratio": float(np.max(ratios)),
+                    "n": len(ratios),
+                })
+    hier = [r for r in rows if r["algo"].startswith("hierarchical")]
+    claims = {
+        "hier_mean_ratio": max(r["mean_ratio"] for r in hier),
+        "hier_worst_ratio": max(r["max_ratio"] for r in hier),
+        "hier_mean_ratio_max": HIER_MEAN_RATIO_MAX,
+        "hier_worst_ratio_max": HIER_WORST_RATIO_MAX,
+    }
+    payload = {"rows": rows, "n_nodes": n_nodes,
+               "capacity_frac": capacity_frac, "claims": claims}
     save(ARTIFACT, payload)
-    print(table(rows, ["model", "classes", "mean_ratio", "p95_ratio", "max_ratio", "n"],
-                "Color-coding placement vs optimal (approximation ratio)"))
+    print(table(rows, ["model", "algo", "classes", "mean_ratio", "p95_ratio",
+                       "max_ratio", "n"],
+                "Placement vs optimal (approximation ratio)"))
+    print(f"claims: {claims}")
+    assert claims["hier_mean_ratio"] <= HIER_MEAN_RATIO_MAX, claims
+    assert claims["hier_worst_ratio"] <= HIER_WORST_RATIO_MAX, claims
     return payload
 
 

@@ -119,6 +119,46 @@ def _filter_kwargs(fn, kwargs: dict) -> dict:
     return {k: v for k, v in kwargs.items() if k in params}
 
 
+class PlanCache:
+    """Memo for the expensive per-plan sublattices, keyed by (cluster
+    generation / comm digest, spec knobs).
+
+    ``replicas="auto"`` re-plans R candidate splits and every recovery
+    re-solves placement on every churn event; without the cache each of
+    those recomputes the bandwidth quantization, the cluster split, and the
+    probe-derived inputs from scratch.  Entries are keyed on explicit
+    content keys (``CommGraph.key()`` digests, ``EdgeCluster.generation``
+    counters), so a stale hit is impossible as long as the key captures
+    every input -- the property the planner call sites maintain.
+    """
+
+    def __init__(self, max_entries: int = 512):
+        self.max_entries = int(max_entries)
+        self._store: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, key, build):
+        """Return the cached value for ``key``, building (and storing) it on
+        a miss.  FIFO-evicts when full; a raising ``build`` caches nothing."""
+        if key in self._store:
+            self.hits += 1
+            return self._store[key]
+        value = build()
+        self.misses += 1
+        if len(self._store) >= self.max_entries:
+            self._store.pop(next(iter(self._store)))
+        self._store[key] = value
+        return value
+
+    def invalidate(self) -> None:
+        self._store.clear()
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._store)}
+
+
 # ---------------------------------------------------------------------------
 # Replica sets: disjoint sub-clusters, one pipeline each
 # ---------------------------------------------------------------------------
@@ -328,6 +368,7 @@ class Planner:
         seed: int = 0,
         codec: str | None = None,
         accuracy_tolerance: float | None = None,
+        cache: PlanCache | None = None,
     ):
         from repro.dataplane import AUTO, default_codec, get_codec
 
@@ -337,6 +378,7 @@ class Planner:
         self.joint = get_strategy("joint", joint) if joint is not None else None
         self.n_classes = n_classes
         self.seed = seed
+        self.cache = cache if cache is not None else PlanCache()
         self.codec = codec or default_codec()
         if self.codec != AUTO:
             get_codec(self.codec)  # typos raise here, with suggestions
@@ -474,12 +516,23 @@ class Planner:
         """Placement only -- the dispatcher's re-placement (recovery) path."""
         if seed is None:
             seed = self.seed
+        kwargs = dict(
+            n_classes=self.n_classes, seed=seed,
+            in_bytes=in_bytes, out_bytes=out_bytes, dispatcher=dispatcher,
+        )
+        params = inspect.signature(self.placer.fn).parameters
+        if "quantized" in params:
+            # the quantized bandwidth-class sublattice is pure in (comm,
+            # n_classes): share it across the auto-replica R search and
+            # every recovery re-solve on an unchanged comm
+            from repro.core.placement import quantize_bandwidths
+
+            kwargs["quantized"] = self.cache.lookup(
+                ("quantize", comm.key(), self.n_classes),
+                lambda: quantize_bandwidths(comm.bw, self.n_classes),
+            )
         return self.placer.fn(
-            boundaries, part_bytes, comm,
-            **_filter_kwargs(self.placer.fn, dict(
-                n_classes=self.n_classes, seed=seed,
-                in_bytes=in_bytes, out_bytes=out_bytes, dispatcher=dispatcher,
-            )),
+            boundaries, part_bytes, comm, **_filter_kwargs(self.placer.fn, kwargs),
         )
 
     # -- replica sets --------------------------------------------------------
@@ -535,7 +588,13 @@ class Planner:
         fallback: ReplicatedPlan | None = None
         for n_rep in candidates:
             try:
-                groups = split_cluster(comm, n_rep, dispatcher=dispatcher)
+                # the greedy split is pure in (comm, n_rep, dispatcher):
+                # cache it so the "auto"/"max" R searches and the
+                # autoscaler's repeated widest-split planning stop paying it
+                groups = self.cache.lookup(
+                    ("split", comm.key(), n_rep, dispatcher),
+                    lambda: split_cluster(comm, n_rep, dispatcher=dispatcher),
+                )
             except ValueError:
                 # more groups than hosting nodes: infeasible, not a crash --
                 # deploy() surfaces it as a structured InfeasibleSpecError
@@ -547,7 +606,10 @@ class Planner:
             keep = () if dispatcher is None else (dispatcher,)
             plans = []
             for g in groups:
-                sub = subcluster(comm, g, keep=keep)
+                sub = self.cache.lookup(
+                    ("subcluster", comm.key(), tuple(g), keep),
+                    lambda: subcluster(comm, g, keep=keep),
+                )
                 cap = capacity
                 if cap is None:
                     cap = float(max(sub.node_capacity[list(g)], default=0.0))

@@ -113,6 +113,8 @@ class ControlPlane:
         seed: int = 0,
         allowed_nodes: set[int] | None = None,
         hosting_nodes: set[int] | None = None,
+        scoped_recovery: bool = True,
+        recovery_width: int | None = None,
     ):
         self.cluster = cluster
         self.store = store
@@ -123,6 +125,11 @@ class ControlPlane:
             allowed_nodes=allowed_nodes, hosting_nodes=hosting_nodes,
         )
         self.link_tolerance = link_tolerance
+        # NodeFailed recovery scope: re-solve only the failure neighborhood
+        # (surviving path + recovery_width best-connected spares), falling
+        # back to a full re-solve when the scoped one is infeasible
+        self.scoped_recovery = scoped_recovery
+        self.recovery_width = recovery_width
         self._default_capacity = capacity
         self._default_compression = compression_ratio
         self.desired: DesiredState | None = None
@@ -317,8 +324,17 @@ class ControlPlane:
             # dead node as usable for later configures
             self.dispatcher.probe_bandwidths()
             return ReconcileAction(event, "noop", "node hosted no pod")
-        self._replace()
+        scope = (
+            self._failure_neighborhood(event.node_id)
+            if self.scoped_recovery else None
+        )
+        self._replace(scope=scope)
         detail = f"re-placed {len(dead)} pod(s) off node {event.node_id}"
+        rec = self.dispatcher.last_recovery
+        if rec is not None and rec.get("scoped"):
+            detail += f"; scoped to {rec['scope_size']} node(s)"
+        elif scope is not None:
+            detail += "; scoped solve infeasible, full re-solve"
         if leader_died:
             detail += f"; re-elected leader {self.dispatcher.leader}"
         return ReconcileAction(event, "replace", detail)
@@ -368,10 +384,37 @@ class ControlPlane:
             f"bottleneck {before:.2e}s -> {after:.2e}s, re-placed",
         )
 
-    def _replace(self) -> None:
+    def _failure_neighborhood(self, failed: int) -> list[int]:
+        """The node slice a ``NodeFailed`` re-solve is scoped to: surviving
+        path nodes plus the ``recovery_width`` healthy visible spares with
+        the fattest link into the old path (incl. the failed node's
+        neighborhood, since the replacement inherits its role)."""
+        pipe = self.pipeline
+        surviving = [
+            p.node_id for p in pipe.pods
+            if p.node_id != failed and self.cluster.nodes[p.node_id].healthy
+        ]
+        allowed = self.dispatcher.allowed_nodes
+        anchors = set(surviving) | {failed}
+        spares = []
+        for node in self.cluster.nodes:
+            i = node.node_id
+            if (not node.healthy or i in anchors
+                    or (allowed is not None and i not in allowed)):
+                continue
+            bw = max((self.cluster.true_bandwidth(i, a) for a in anchors),
+                     default=0.0)
+            spares.append((bw, i))
+        width = self.recovery_width
+        if width is None:
+            width = max(4, len(pipe.pods))
+        spares.sort(key=lambda t: (-t[0], t[1]))
+        return surviving + [i for _, i in spares[:width]]
+
+    def _replace(self, scope: Sequence[int] | None = None) -> None:
         self.pipeline = self.dispatcher.replace_placement(
             self.pipeline, self.desired.graph, self.desired.version,
-            capacity=self.desired.capacity,
+            capacity=self.desired.capacity, scope_nodes=scope,
         )
 
     def _current_bottleneck(self) -> float:
@@ -497,6 +540,12 @@ class ReplicaSet:
                 return None
             out |= set(allowed)
         return out
+
+    def recovery_log(self) -> list[dict | None]:
+        """Per-replica ``Dispatcher.last_recovery`` records (``None`` =
+        that replica never ran a recovery re-solve).  Chaos tests assert
+        scoped recoveries stayed inside the failed replica's neighborhood."""
+        return [c.dispatcher.last_recovery for c in self.controls]
 
     def deployed_plan(self) -> ReplicatedPlan:
         """The as-deployed aggregate: live replicas' current plans."""

@@ -76,10 +76,26 @@ class Dispatcher:
         self.leader: int | None = None
         self.probed: CommGraph | None = None
         self.last_plan: Plan | None = None  # most recent feasible plan
+        # cache keys: the cluster generation (+ mask fingerprint) the cached
+        # probe / flops sublattices were computed at
+        self._probe_key: tuple | None = None
+        self._flops_key: int | None = None
+        self._flops: list[float] | None = None
+        # recovery bookkeeping: how the last replace_placement was solved
+        # ({"scoped": bool, "scope_size": int, "fallback": str}); None until
+        # the first recovery
+        self.last_recovery: dict | None = None
 
     def node_flops(self) -> list[float]:
-        """Per-node compute rates, indexed by node id (0 = unmodelled)."""
-        return [n.flops_per_s for n in self.cluster.nodes]
+        """Per-node compute rates, indexed by node id (0 = unmodelled).
+
+        Cached by cluster generation: one of ``service_times``'s inputs the
+        planner re-reads on every (re-)plan."""
+        gen = self.cluster.generation
+        if self._flops is None or self._flops_key != gen:
+            self._flops = [n.flops_per_s for n in self.cluster.nodes]
+            self._flops_key = gen
+        return self._flops
 
     # -- Sec 2.1: system initialization --------------------------------------
     def reset(self) -> None:
@@ -87,6 +103,7 @@ class Dispatcher:
         restart, required when a node is *added*)."""
         self.leader = None
         self.probed = None
+        self._probe_key = None
 
     def visible_healthy_ids(self) -> list[int]:
         """Healthy nodes this dispatcher may see (its replica group, or the
@@ -103,8 +120,24 @@ class Dispatcher:
         self.leader = min(healthy)
         return self.leader
 
+    def _mask_fingerprint(self) -> tuple:
+        return (
+            None if self.allowed_nodes is None else frozenset(self.allowed_nodes),
+            None if self.hosting_nodes is None else frozenset(self.hosting_nodes),
+        )
+
     def probe_bandwidths(self) -> CommGraph:
-        """IPerf-analogue: noisy symmetric measurements of live links."""
+        """IPerf-analogue: noisy symmetric measurements of live links.
+
+        Cached by (cluster generation, view mask): re-probing an unchanged
+        cluster returns the stored measurement instead of re-drawing an
+        O(n^2) noise matrix -- the recovery path re-probes on every
+        re-solve, and at fleet scale the redraw dominated small re-plans.
+        A topology or health mutation bumps ``EdgeCluster.generation`` and
+        invalidates the entry."""
+        key = (self.cluster.generation, self._mask_fingerprint())
+        if self.probed is not None and self._probe_key == key:
+            return self.probed
         true = self.cluster.degraded_comm()
         n = true.n
         noise = self.rng.lognormal(0.0, self.probe_noise, size=(n, n))
@@ -122,6 +155,7 @@ class Dispatcher:
                 elif self.hosting_nodes is not None and i not in self.hosting_nodes:
                     cap[i] = min(cap[i], 0.0)
         self.probed = CommGraph(bw=bw, node_capacity=cap)
+        self._probe_key = key
         return self.probed
 
     # -- Sec 2.2: configuration step -----------------------------------------
@@ -192,6 +226,19 @@ class Dispatcher:
         """
         return self.replace_placement(pipeline, graph, version, capacity=capacity)
 
+    def scoped_comm(self, comm: CommGraph, scope_nodes) -> CommGraph:
+        """``comm`` restricted to ``scope_nodes`` + the leader (links only):
+        nodes outside the scope lose links and capacity, so a scoped
+        recovery solve can only place within the neighborhood."""
+        allowed = set(int(i) for i in scope_nodes)
+        if self.leader is not None:
+            allowed.add(self.leader)
+        mask = np.zeros(comm.n, dtype=bool)
+        mask[list(allowed)] = True
+        bw = np.where(mask[:, None] & mask[None, :], comm.bw, 0.0)
+        cap = np.where(mask, comm.node_capacity, 0.0)
+        return CommGraph(bw=bw, node_capacity=cap)
+
     def replace_placement(
         self,
         pipeline: InferencePipeline,
@@ -199,24 +246,27 @@ class Dispatcher:
         version: int,
         *,
         capacity: float | None = None,
+        scope_nodes=None,
     ) -> InferencePipeline:
         """Re-place on the degraded cluster; restart dead pods from the store.
 
         The paper reschedules pods onto healthy nodes; partitions are reused
         (their files live on NFS), only the placement is re-solved through
-        the planner's placer strategy.  Falls back to a full reconfigure when
-        the surviving nodes cannot host the existing partitions.
+        the planner's placer strategy.  With ``scope_nodes`` (the control
+        plane's failure neighborhood) the solve is first attempted on the
+        comm graph restricted to that neighborhood -- churn re-plans then
+        touch only the affected slice -- and falls back to the full graph
+        when the scoped solve is infeasible.  Falls back further to a full
+        reconfigure when even the full graph cannot host the existing
+        partitions.
         """
         if self.leader is not None and not self.cluster.nodes[self.leader].healthy:
             self.elect_leader()  # leader itself died -> re-elect
         self.probe_bandwidths()
         comm = self.probed
         part = pipeline_partition(pipeline)
-        place = self.planner.place(
-            pipeline.boundary_bytes,
-            [p.param_bytes for p in part],
-            comm,
-            seed=int(self.rng.integers(1 << 31)),
+        part_bytes = [p.param_bytes for p in part]
+        place_kwargs = dict(
             # score the dispatcher round-trip like configure() does, so a
             # recovery placement doesn't strand the first/last partition
             # behind a dead-slow link to the leader
@@ -224,7 +274,29 @@ class Dispatcher:
             out_bytes=graph.layers[-1].out_bytes,
             dispatcher=self.leader,
         )
+        place = None
+        self.last_recovery = {"scoped": False, "scope_size": 0, "fallback": "none"}
+        if scope_nodes is not None:
+            place = self.planner.place(
+                pipeline.boundary_bytes, part_bytes,
+                self.scoped_comm(comm, scope_nodes),
+                seed=int(self.rng.integers(1 << 31)), **place_kwargs,
+            )
+            if place.feasible:
+                self.last_recovery = {
+                    "scoped": True, "scope_size": len(set(scope_nodes)),
+                    "fallback": "none",
+                }
+            else:
+                place = None
+                self.last_recovery["fallback"] = "full"
+        if place is None:
+            place = self.planner.place(
+                pipeline.boundary_bytes, part_bytes, comm,
+                seed=int(self.rng.integers(1 << 31)), **place_kwargs,
+            )
         if not place.feasible:
+            self.last_recovery["fallback"] = "reconfigure"
             # partitions no longer fit the surviving nodes: full reconfigure
             plan = self.configure(graph, version, capacity=capacity,
                                   compression_ratio=pipeline.compression_ratio)

@@ -36,6 +36,9 @@ class EdgeCluster:
         self.nodes = [
             Node(i, comm.node_capacity[i], flops_per_s) for i in range(comm.n)
         ]
+        # topology/health generation: bumped on every mutation, so planner
+        # and dispatcher caches can key their sublattices on it
+        self.generation = 0
 
     @property
     def n(self) -> int:
@@ -46,9 +49,11 @@ class EdgeCluster:
 
     def fail(self, node_id: int) -> None:
         self.nodes[node_id].healthy = False
+        self.generation += 1
 
     def heal(self, node_id: int) -> None:
         self.nodes[node_id].healthy = True
+        self.generation += 1
 
     def add_node(self, comm: CommGraph, flops_per_s: float | None = None) -> int:
         """Grow the cluster by one node; ``comm`` is the expanded graph.
@@ -69,6 +74,7 @@ class EdgeCluster:
         if flops_per_s is None:
             flops_per_s = self.nodes[-1].flops_per_s if self.nodes else 0.0
         self.nodes.append(Node(new_id, cap[new_id], flops_per_s))
+        self.generation += 1
         return new_id
 
     def degrade_link(self, a: int, b: int, factor: float) -> None:
@@ -77,6 +83,7 @@ class EdgeCluster:
         bw[a, b] *= factor
         bw[b, a] *= factor
         self.comm = CommGraph(bw=bw, node_capacity=self.comm.node_capacity.copy())
+        self.generation += 1
 
     def degraded_comm(self) -> CommGraph:
         """CommGraph with failed nodes' capacity zeroed and links cut."""

@@ -34,6 +34,7 @@ _SUBMODULE_EXPORTS = {
         "place_brute_force",
         "place_color_coding",
         "place_greedy",
+        "place_hierarchical",
         "place_optimal",
         "place_random",
         "quantize_bandwidths",

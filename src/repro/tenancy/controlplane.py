@@ -87,6 +87,18 @@ class MultiTenantControlPlane:
     def observed(self) -> dict:
         return {name: e.observed() for name, e in self.entries.items()}
 
+    def recovery_log(self) -> dict:
+        """Per-tenant recovery records: a tenant's ``Dispatcher.last_recovery``
+        (single plane) or its per-replica list (``ReplicaSet``).  ``None``
+        entries mean no recovery re-solve has run there yet."""
+        out = {}
+        for name, e in self.entries.items():
+            if hasattr(e, "recovery_log"):
+                out[name] = e.recovery_log()
+            else:
+                out[name] = e.dispatcher.last_recovery
+        return out
+
     def owners_of_node(self, node_id: int) -> list[str]:
         return [
             name for name, e in self.entries.items()

@@ -60,7 +60,7 @@ def test_registry_contains_every_algorithm():
         "exhaustive",
     }
     assert set(list_strategies("placer")) == {
-        "color_coding", "greedy", "random", "optimal",
+        "color_coding", "greedy", "random", "optimal", "hierarchical",
     }
     assert set(list_strategies("joint")) == {"sequential", "joint"}
     # defaults are the paper pipeline, listed first

@@ -105,6 +105,46 @@ def test_bandwidth_sweep_benchmark_emits_a_valid_canonical_artifact(
     assert payload["claims"]["best_vs_predicted"] <= 1.05
 
 
+def test_algo_scaling_benchmark_emits_a_valid_canonical_artifact(
+        tmp_path, monkeypatch):
+    """End to end (shrunk sweep): the algo-scaling benchmark writes one
+    schema-valid BENCH_ artifact with flat AND hierarchical placement rows,
+    and its claims pin near-linear hierarchical scaling."""
+    from benchmarks import algo_scaling
+
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path)
+    algo_scaling.run(partition_layers=(64,),
+                     placement_nodes=(16, 64, 128), flat_cap=16)
+    (path,) = tmp_path.iterdir()
+    assert path.name == f"{ARTIFACT_PREFIX}algo_scaling.json"
+    payload = json.loads(path.read_text())
+    validate_payload(path.stem, payload)
+    algos = {r["algo"] for r in payload["rows"] if r["stage"] == "placement"}
+    assert algos == {"flat", "hierarchical"}
+    assert all(r["feasible"] for r in payload["rows"])
+    claims = payload["claims"]
+    assert claims["hier_nodes_hi"] == 128
+    assert claims["hier_ratio"] <= claims["scaling_ratio_max"]
+
+
+def test_approx_ratio_hierarchical_rows_pin_quality(tmp_path, monkeypatch):
+    """End to end (shrunk trials): the approx-ratio harness emits
+    hierarchical rows measured against the exact subset-DP oracle, with
+    claims bounding the degradation."""
+    from benchmarks import approx_ratio
+
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path)
+    payload = approx_ratio.run(trials=4)
+    validate_payload("approx_ratio", payload)
+    hier = [r for r in payload["rows"] if r["algo"].startswith("hierarchical")]
+    assert hier, "no hierarchical rows emitted"
+    claims = payload["claims"]
+    assert claims["hier_mean_ratio"] <= claims["hier_mean_ratio_max"]
+    assert claims["hier_worst_ratio"] <= claims["hier_worst_ratio_max"]
+    # every hierarchical row is oracle-bounded: ratio >= 1 by optimality
+    assert all(r["mean_ratio"] >= 1.0 - 1e-9 for r in hier)
+
+
 def test_latency_pareto_benchmark_emits_a_valid_canonical_artifact(
         tmp_path, monkeypatch):
     """End to end: the open-loop latency pareto writes one schema-valid

@@ -234,6 +234,13 @@ def test_replica_isolation_node_kill_touches_only_its_replica(seed):
     obs = rset.controls[victim_replica].observed()
     assert obs.healthy and victim not in obs.path
     assert set(obs.path) <= rset.groups[victim_replica]
+    # the re-solve itself was scoped to the failure neighborhood inside the
+    # victim's group -- not a full-cluster solve that happened to land there
+    rec = rset.recovery_log()[victim_replica]
+    assert rec is not None and rec["scoped"], rec
+    assert rec["scope_size"] <= len(rset.groups[victim_replica])
+    for r in survivors:
+        assert rset.recovery_log()[r] is None, "a survivor ran a recovery"
     for i, r in enumerate(survivors):
         loop = dep.loop.loops[r]
         assert loop._requeues == 0, "a survivor requeued microbatches"
@@ -351,6 +358,57 @@ def test_chaos_event_burst_between_quiet_phases(seed):
     assert len(dep.loop.completed) == 40 and not dep.loop.failed
     obs = dep.observed()
     assert obs.healthy and obs.version == dep.control.desired.version
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_node_fail_recovery_is_scoped_to_failure_neighborhood(seed):
+    """A ``NodeFailed`` re-solve runs on the failure neighborhood (surviving
+    path + best-connected spares), not the whole cluster: the recovery
+    record says so, the action log says so, and the replacement path stays
+    inside the recorded scope."""
+    dep = _deployment(seed)
+    control = dep.control
+    assert control.scoped_recovery  # the default
+    victim = int(control.pipeline.pods[1].node_id)
+    pre_path = list(control.pipeline.path())
+    dep.inject(NodeFailed(victim))
+    while dep.pending:
+        dep.step()
+    rec = control.dispatcher.last_recovery
+    assert rec is not None and rec["scoped"], rec
+    assert rec["fallback"] == "none"
+    # neighborhood = surviving path + max(4, k) spares, strictly < cluster
+    surviving = [p for p in pre_path if p != victim]
+    width = max(4, len(pre_path))
+    assert rec["scope_size"] <= len(surviving) + width
+    assert rec["scope_size"] < control.cluster.n
+    action = next(a for a in control.history
+                  if a.event is not None and isinstance(a.event, NodeFailed))
+    assert "scoped to" in action.detail, action.detail
+    # the deployed path honors the scope: every node is in the neighborhood
+    scope = set(control._failure_neighborhood(victim))
+    obs = control.observed()
+    assert obs.healthy and victim not in obs.path
+    assert set(obs.path) <= scope | {control.dispatcher.leader}
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_scoped_recovery_falls_back_to_full_solve_when_infeasible(seed):
+    """With ``recovery_width=0`` the neighborhood is just the surviving path
+    -- too few nodes to host k partitions -- so the scoped solve must fall
+    back to the full graph and still converge."""
+    dep = _deployment(seed)
+    control = dep.control
+    control.recovery_width = 0
+    victim = int(control.pipeline.pods[1].node_id)
+    dep.inject(NodeFailed(victim))
+    while dep.pending:
+        dep.step()
+    rec = control.dispatcher.last_recovery
+    assert rec is not None and not rec["scoped"], rec
+    assert rec["fallback"] in ("full", "reconfigure")
+    obs = control.observed()
+    assert obs.healthy and victim not in obs.path
 
 
 # ---------------------------------------------------------------------------

@@ -209,3 +209,79 @@ class TestEdgeCases:
         bw = np.array([[0.0, 1.0], [2.0, 0.0]])
         with pytest.raises(ValueError):
             CommGraph.uniform(bw, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical large-n placement
+# ---------------------------------------------------------------------------
+
+from repro.core import place_hierarchical  # noqa: E402
+from repro.core.placement import HIERARCHICAL_NODE_LIMIT  # noqa: E402
+
+
+class TestHierarchical:
+    def test_feasible_and_valid_on_large_cluster(self):
+        comm = rand_comm(200, 0)
+        r = place_hierarchical([5.0] * 4, [1.0] * 5, comm, seed=1)
+        assert r.feasible
+        assert len(r.path) == 5 and len(set(r.path)) == 5
+        assert all(0 <= i < comm.n for i in r.path)
+        # reported bottleneck is the true one for the returned path
+        worst = max(
+            5.0 / comm.bw[a, b] for a, b in zip(r.path, r.path[1:])
+        )
+        assert r.bottleneck_latency == pytest.approx(worst)
+        assert r.algorithm.startswith("hierarchical(")
+
+    def test_never_beats_optimal_small_n(self):
+        for seed in range(8):
+            comm = rand_comm(8, seed)
+            opt = place_optimal([3.0] * 3, [1.0] * 4, comm)
+            # tiny groups force the coarse-DP path even at n=8
+            hier = place_hierarchical(
+                [3.0] * 3, [1.0] * 4, comm, seed=seed, group_size=3
+            )
+            assert opt.feasible and hier.feasible
+            assert hier.bottleneck_latency >= opt.bottleneck_latency - 1e-12
+
+    def test_small_clusters_fall_back_to_flat(self):
+        comm = rand_comm(6, 4)
+        r = place_hierarchical([2.0] * 2, [1.0] * 3, comm, seed=0)
+        assert r.feasible
+        assert "flat_fallback" in r.algorithm
+
+    def test_color_coding_delegates_above_limit(self):
+        comm = rand_comm(HIERARCHICAL_NODE_LIMIT + 8, 5)
+        r = place_color_coding([4.0] * 3, [1.0] * 4, comm, seed=0)
+        assert r.feasible
+        assert r.algorithm.startswith("hierarchical(")
+        # and the flat path is still reachable explicitly
+        flat = place_color_coding(
+            [4.0] * 3, [1.0] * 4, comm, seed=0, hierarchical_limit=None
+        )
+        assert flat.feasible and not flat.algorithm.startswith("hierarchical(")
+
+    def test_respects_capacity_and_dispatcher(self):
+        rng = np.random.default_rng(7)
+        n = 96
+        bw = rng.uniform(1.0, 30.0, (n, n))
+        bw = (bw + bw.T) / 2
+        np.fill_diagonal(bw, 0.0)
+        cap = np.full(n, 10.0)
+        cap[0] = -1.0  # dispatcher hosts nothing
+        cap[1::2] = 0.5  # odd nodes cannot host any partition
+        comm = CommGraph(bw=bw, node_capacity=cap)
+        r = place_hierarchical(
+            [2.0] * 3, [1.0] * 4, comm, seed=0,
+            in_bytes=1.0, out_bytes=1.0, dispatcher=0,
+        )
+        assert r.feasible
+        assert 0 not in r.path
+        assert all(i % 2 == 0 for i in r.path), r.path
+
+    def test_deterministic_for_fixed_seed(self):
+        comm = rand_comm(150, 9)
+        a = place_hierarchical([3.0] * 4, [1.0] * 5, comm, seed=3)
+        b = place_hierarchical([3.0] * 4, [1.0] * 5, comm, seed=3)
+        assert a.path == b.path
+        assert a.bottleneck_latency == b.bottleneck_latency
