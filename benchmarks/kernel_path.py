@@ -1,0 +1,177 @@
+"""Kernel fast-path gate: parity pins + fused dequant-matmul timing.
+
+This is the acceptance gate for serving real models through the Pallas
+kernels.  It runs the SAME code the serving engines run -- a deployed
+``demo_transformer`` pipeline whose stages execute flash attention and whose
+int8-coded hops decode inside the receiving stage's first matmul (the fused
+dequant-matmul handler) -- and pins:
+
+  * int8 round-trip relative error      <= INT8_MAX_REL_ERROR (the constant
+    the data plane reports to the planner's accuracy check);
+  * flash kernel (interpret) vs ref     <= 2e-5 f32 (the documented forward
+    tolerance from tests/test_kernels.py);
+  * fused vs unfused dequant-matmul     <= 1e-5 (same math, one dispatch);
+  * Pallas e2e deployment vs reference  <= INT8_MAX_REL_ERROR relative;
+  * fused one-dispatch service time     <= unfused two-dispatch (dequantize
+    then matmul) -- the whole point of fusing the data plane into compute.
+
+Any violated pin raises, so CI fails loudly instead of shipping a fast path
+that silently drifts from the reference numerics.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.kernel import flash_attention_tpu
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quantize import (
+    INT8_MAX_REL_ERROR,
+    dequant_matmul,
+    dequantize_int8,
+    quantize_int8,
+)
+
+from benchmarks.common import save, table
+
+ARTIFACT = "kernel_path"  # results/BENCH_kernel_path.json
+
+# timing noise floor: best-of-N minima still jitter a few percent on shared
+# CI runners, so the <= gate carries this much slack (documented, not hidden)
+_TIMING_SLACK = 1.05
+
+
+def _best_interleaved(fns, args, reps: int = 15) -> list[float]:
+    """Best-of-``reps`` wall time per fn, measured round-robin so slow drift
+    on a shared runner hits every candidate equally."""
+    for fn in fns:
+        jax.block_until_ready(fn(*args))  # compile + warm caches
+    best = [float("inf")] * len(fns)
+    for _ in range(reps):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
+
+
+def _rel_err(got, want) -> float:
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    scale = max(1e-9, float(np.max(np.abs(want))))
+    return float(np.max(np.abs(got - want))) / scale
+
+
+def _e2e_outputs() -> dict[bool, np.ndarray]:
+    """Deploy demo_transformer twice (reference / Pallas-interpret), int8 on
+    the wire, and return each deployment's output for the same input."""
+    from repro.api import ClusterSpec, DeploymentSpec, deploy
+    from repro.core.model_zoo import demo_transformer
+
+    x = jnp.ones((256, 32)) * 0.1
+    outs = {}
+    for use_pallas in (False, True):
+        graph, executor_for_version = demo_transformer(
+            use_pallas=use_pallas, interpret=use_pallas)
+        d = deploy(DeploymentSpec(
+            model=graph,
+            executor_for_version=executor_for_version,
+            cluster=ClusterSpec(n_nodes=6,
+                                capacity_bytes=graph.total_param_bytes / 2.5,
+                                seed=5),
+            codec="int8",
+            seed=3,
+            use_pallas=use_pallas,
+            interpret=use_pallas,
+        ))
+        if "int8" not in d.control.pipeline.executor.fused_codecs:
+            raise RuntimeError("demo_transformer lost its fused int8 handler")
+        if "int8" not in d.plan.codecs:
+            raise RuntimeError("planner put no int8 hop on the wire")
+        d.submit(x)
+        (req,) = d.drain()
+        outs[use_pallas] = np.asarray(req.result)
+    return outs
+
+
+def run(reps: int = 15, timing_slack: float = _TIMING_SLACK) -> dict:
+    rows = []
+
+    def pin(check: str, value: float, bound: float) -> None:
+        rows.append({"check": check, "value": float(value),
+                     "bound": float(bound), "ok": bool(value <= bound)})
+
+    # --- int8 hop round-trip, kernel (interpret) path -----------------------
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 2048), jnp.float32)
+    q, s = quantize_int8(x, 256, use_pallas=True, interpret=True)
+    y = dequantize_int8(q, s, dtype=jnp.float32, block=256,
+                        use_pallas=True, interpret=True)
+    scale = float(jnp.max(jnp.abs(x)))
+    pin("int8_roundtrip_rel_err", float(jnp.max(jnp.abs(y - x))) / scale,
+        INT8_MAX_REL_ERROR)
+
+    # --- flash attention kernel (interpret) vs ref --------------------------
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    b, sq, h, kh, hd = 1, 512, 4, 2, 64
+    fq = jax.random.normal(kq, (b, sq, h, hd), jnp.float32)
+    fk = jax.random.normal(kk, (b, sq, kh, hd), jnp.float32)
+    fv = jax.random.normal(kv, (b, sq, kh, hd), jnp.float32)
+    out = flash_attention_tpu(fq, fk, fv, causal=True, window=128,
+                              softcap=50.0, block_q=128, block_k=128,
+                              interpret=True)
+    ref = attention_ref(fq, fk, fv, causal=True, window=128, softcap=50.0)
+    pin("flash_interpret_max_abs_err", float(jnp.max(jnp.abs(out - ref))),
+        2e-5)
+
+    # --- fused dequant-matmul parity (ref and Pallas-interpret) -------------
+    rows_n, d_in, d_out, blk = 512, 2048, 2048, 256
+    w = jax.random.normal(jax.random.PRNGKey(2), (d_in, d_out),
+                          jnp.float32) * 0.05
+    xa = jax.random.normal(jax.random.PRNGKey(3), (rows_n, d_in), jnp.float32)
+    qa, sa = quantize_int8(xa, blk)
+    unfused_out = dequantize_int8(qa, sa, dtype=jnp.float32, block=blk) @ w
+    pin("fused_vs_unfused_rel_err",
+        _rel_err(dequant_matmul(qa, sa, w, dtype=jnp.float32, block=blk),
+                 unfused_out), 1e-5)
+    pin("fused_pallas_interpret_rel_err",
+        _rel_err(dequant_matmul(qa, sa, w, dtype=jnp.float32, block=blk,
+                                use_pallas=True, interpret=True),
+                 unfused_out), 1e-5)
+
+    # --- e2e: deployed demo_transformer, Pallas vs reference ----------------
+    outs = _e2e_outputs()
+    pin("e2e_pallas_vs_ref_rel_err", _rel_err(outs[True], outs[False]),
+        INT8_MAX_REL_ERROR)
+
+    # --- fused one-dispatch <= unfused two-dispatch service time ------------
+    deq = jax.jit(lambda q, s: dequantize_int8(q, s, dtype=jnp.float32,
+                                               block=blk))
+    mm = jax.jit(lambda a, b_: a @ b_)
+    unfused_s, fused_s = _best_interleaved(
+        [lambda q, s, w_: mm(deq(q, s), w_),
+         lambda q, s, w_: dequant_matmul(q, s, w_, dtype=jnp.float32,
+                                         block=blk)],
+        (qa, sa, w), reps=reps)
+    pin("fused_over_unfused_time_ratio", fused_s / unfused_s, timing_slack)
+
+    payload = {
+        "rows": rows,
+        "fused_ms": fused_s * 1e3,
+        "unfused_ms": unfused_s * 1e3,
+        "int8_max_rel_error": INT8_MAX_REL_ERROR,
+        "timing_slack": timing_slack,
+    }
+    save(ARTIFACT, payload)
+    print(table(rows, ["check", "value", "bound", "ok"], "Kernel fast path"))
+    bad = [r["check"] for r in rows if not r["ok"]]
+    if bad:
+        raise RuntimeError(f"kernel fast-path pins violated: {bad}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

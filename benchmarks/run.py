@@ -32,6 +32,7 @@ def bench_registry(fast: bool = False) -> dict:
         fig3_bottleneck,
         joint_opt,
         kernel_bench,
+        kernel_path,
         latency_pareto,
         multi_tenant,
         replica_scaling,
@@ -49,6 +50,7 @@ def bench_registry(fast: bool = False) -> dict:
         "joint_opt": (joint_opt, lambda: joint_opt.run(trials=trials)),
         "algo_scaling": (algo_scaling, algo_scaling.run),
         "kernels": (kernel_bench, kernel_bench.run),
+        "kernel_path": (kernel_path, kernel_path.run),
         "churn": (churn_throughput,
                   lambda: churn_throughput.run(per_phase=8 if fast else 40)),
         "replicas": (replica_scaling,

@@ -150,6 +150,7 @@ def _build_deployment(
             seed=spec.seed + seed_offset,
             allowed_nodes=None if nodes is None else set(nodes) | {0},
             hosting_nodes=None if nodes is None else set(nodes),
+            execution=spec.execution(),
         )
         control.bootstrap(version)
         dep = Deployment(spec, control, positions=positions)
@@ -166,6 +167,7 @@ def _build_deployment(
                 seed=spec.seed + seed_offset + 7919 * r,
                 allowed_nodes=set(group) | {0},
                 hosting_nodes=set(group),
+                execution=spec.execution(),
             )
             control.bootstrap(version)
             controls.append(control)
@@ -225,6 +227,7 @@ def _deploy_autoscaled(
             seed=spec.seed + seed_offset + 7919 * r,
             allowed_nodes=set(group) | {0},
             hosting_nodes=set(group),
+            execution=spec.execution(),
         )
         control.bootstrap(max(version, store.current_version()))
         return control

@@ -220,25 +220,37 @@ class AutoscaleSpec:
         return tuple(issues)
 
 
-def _resolve_model(model) -> tuple[LayerGraph, Callable | None]:
+def _resolve_model(
+    model, *, use_pallas: bool = False, interpret: bool = False
+) -> tuple[LayerGraph, Callable | None]:
     """model field -> (graph, executor_for_version | None).
 
     Accepts a ``LayerGraph``, a model-zoo name (``vgg16``, ``resnet50``,
     ``inceptionv3``, ``mobilenetv2``), or one of the executable demo models
-    (``demo_mlp`` / ``demo_ssm``, which also supply versioned executors).
+    (``demo_mlp`` / ``demo_ssm`` / ``demo_transformer``, which also supply
+    versioned executors).  ``use_pallas``/``interpret`` (the spec's
+    execution knob) select the kernel path inside the executable models'
+    stage executors.
     """
     if isinstance(model, LayerGraph):
         return model, None
     if not isinstance(model, str):
         raise TypeError(f"model must be a LayerGraph or name, got {type(model)}")
-    from repro.core.model_zoo import PAPER_MODELS, demo_mlp, demo_ssm
+    from repro.core.model_zoo import (
+        PAPER_MODELS,
+        demo_mlp,
+        demo_ssm,
+        demo_transformer,
+    )
 
     if model in PAPER_MODELS:
         return PAPER_MODELS[model](), None
     if model in ("demo_mlp", "mlp"):
         return demo_mlp()
     if model in ("demo_ssm", "ssm"):
-        return demo_ssm()
+        return demo_ssm(use_pallas=use_pallas, interpret=interpret)
+    if model in ("demo_transformer", "transformer"):
+        return demo_transformer(use_pallas=use_pallas, interpret=interpret)
     raise KeyError(model)
 
 
@@ -320,6 +332,14 @@ class DeploymentSpec:
         load-driven replica scaling (``AutoscaleSpec``): grow/retire
         replicas from observed backlog + p99 drift.  Mutually exclusive
         with an explicit ``replicas`` count (the autoscaler owns R).
+    use_pallas / interpret:
+        the execution knob (``repro.core.execution.ExecutionKnob``):
+        ``use_pallas=True`` runs the Pallas kernels inside the executable
+        models' stage executors (flash attention, SSD scan, fused
+        dequant-matmul) AND the int8 link codec's quantize/dequantize;
+        ``interpret=True`` runs those kernels under the Pallas interpreter
+        so CI exercises the deployment artifacts on CPU.  Defaults keep
+        the pure-jnp reference paths.
     """
 
     model: Any
@@ -345,6 +365,8 @@ class DeploymentSpec:
     slo_classes: tuple[SLOClass, ...] | None = None
     arrival: ArrivalSpec | None = None
     autoscale: AutoscaleSpec | None = None
+    use_pallas: bool = False
+    interpret: bool = False
 
     def __post_init__(self) -> None:
         if isinstance(self.cluster, CommGraph):
@@ -363,7 +385,15 @@ class DeploymentSpec:
 
     # -- resolution ----------------------------------------------------------
     def resolve_model(self) -> tuple[LayerGraph, Callable | None]:
-        return _resolve_model(self.model)
+        return _resolve_model(self.model, use_pallas=self.use_pallas,
+                              interpret=self.interpret)
+
+    def execution(self):
+        """The spec's execution knob as a ``core.execution.ExecutionKnob``."""
+        from repro.core.execution import ExecutionKnob
+
+        return ExecutionKnob(use_pallas=self.use_pallas,
+                             interpret=self.interpret)
 
     def graph(self) -> LayerGraph:
         return self.resolve_model()[0]
@@ -403,7 +433,8 @@ class DeploymentSpec:
         except KeyError as e:
             from repro.core.model_zoo import PAPER_MODELS
 
-            known = ", ".join([*PAPER_MODELS, "demo_mlp"])
+            known = ", ".join(
+                [*PAPER_MODELS, "demo_mlp", "demo_ssm", "demo_transformer"])
             issues.append(SpecIssue(
                 "unknown_model", f"model {e.args[0]!r} not in the zoo ({known})"
             ))

@@ -115,6 +115,7 @@ class ControlPlane:
         hosting_nodes: set[int] | None = None,
         scoped_recovery: bool = True,
         recovery_width: int | None = None,
+        execution=None,
     ):
         self.cluster = cluster
         self.store = store
@@ -123,6 +124,7 @@ class ControlPlane:
         self.dispatcher = Dispatcher(
             cluster, store, planner=planner, n_classes=n_classes, seed=seed,
             allowed_nodes=allowed_nodes, hosting_nodes=hosting_nodes,
+            execution=execution,
         )
         self.link_tolerance = link_tolerance
         # NodeFailed recovery scope: re-solve only the failure neighborhood

@@ -51,9 +51,14 @@ class Dispatcher:
         seed: int = 0,
         allowed_nodes: set[int] | None = None,
         hosting_nodes: set[int] | None = None,
+        execution=None,
     ):
         self.cluster = cluster
         self.store = store
+        # execution knob (repro.core.execution.ExecutionKnob | None): which
+        # kernel path the deployed pipelines' codecs run; threaded into every
+        # InferencePipeline this dispatcher deploys
+        self.execution = execution
         # replica-set masking: ``allowed_nodes`` bounds what this dispatcher
         # can see at all (its group + the shared dispatcher node); within
         # that, only ``hosting_nodes`` may host partitions.  ``None`` (the
@@ -208,6 +213,7 @@ class Dispatcher:
             boundary_bytes=list(plan.partition.boundaries),
             compression_ratio=compression_ratio,
             link_codecs=list(plan.codecs) if plan.codecs else None,
+            execution=self.execution,
         )
 
     # -- fault tolerance -------------------------------------------------------

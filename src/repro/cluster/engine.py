@@ -590,10 +590,21 @@ class PipelinedServingLoop:
                 self._link_xfers[idx] += 1
                 codec = self._link_codecs[idx] if idx < len(self._link_codecs) else None
                 if codec is not None:
-                    # the receiver sees decode(encode(x)): the codec's real
-                    # transform (Pallas int8 stack, fp16, top-k) runs on the
-                    # activations riding the wire
-                    mb.x = codec.transcode(mb.x)
+                    executor = self.control.pipeline.executor
+                    if (idx != k and codec.name
+                            in getattr(executor, "fused_codecs", ())):
+                        # fused decode: the receiving stage's first op
+                        # consumes the wire payload directly (e.g. int8 ->
+                        # dequant-matmul), so hand over the still-encoded
+                        # activation instead of eagerly decoding it
+                        from repro.dataplane.base import EncodedActivation
+
+                        mb.x = EncodedActivation(codec, codec.encode(mb.x))
+                    else:
+                        # the receiver sees decode(encode(x)): the codec's
+                        # real transform (Pallas int8 stack, fp16, top-k)
+                        # runs on the activations riding the wire
+                        mb.x = codec.transcode(mb.x)
                 if idx == k:
                     self._complete(mb)
                 else:

@@ -149,6 +149,7 @@ class InferencePipeline:
         boundary_bytes: Sequence[float],
         compression_ratio: float = 1.0,
         link_codecs: Sequence[str] | None = None,
+        execution=None,
     ):
         self.cluster = cluster
         self.pods = list(pods)
@@ -158,14 +159,30 @@ class InferencePipeline:
         # transfer codec per hop (len k+1, service_times indexing); None =
         # all-identity (direct lifecycle construction, pre-dataplane tests)
         self.link_codecs = list(link_codecs) if link_codecs is not None else None
+        # execution knob (repro.core.execution.ExecutionKnob | None):
+        # hop_codec() configures knob-aware codecs with it, so e.g. int8
+        # links quantize through the Pallas kernel when the spec says so
+        self.execution = execution
 
     def hop_codec(self, h: int):
-        """The ``repro.dataplane.Codec`` riding hop ``h`` (None = raw)."""
+        """The ``repro.dataplane.Codec`` riding hop ``h`` (None = raw).
+
+        Knob-aware codecs (those with a ``use_pallas`` attribute) are
+        returned as ``configured()`` copies carrying the pipeline's
+        execution knob; the registry singletons stay untouched."""
         if self.link_codecs is None or not 0 <= h < len(self.link_codecs):
             return None
         from repro.dataplane import get_codec
 
-        return get_codec(self.link_codecs[h])
+        codec = get_codec(self.link_codecs[h])
+        if (codec is not None and self.execution is not None
+                and getattr(self.execution, "use_pallas", False)
+                and hasattr(codec, "use_pallas")):
+            codec = codec.configured(
+                use_pallas=self.execution.use_pallas,
+                interpret=self.execution.interpret,
+            )
+        return codec
 
     def wire_bytes(self, boundary_idx: int) -> float:
         """On-wire bytes of partition boundary ``boundary_idx`` (hop
@@ -201,9 +218,16 @@ class InferencePipeline:
                 link_s.append(float("inf") if bw <= 0 else bytes_ / bw)
                 codec = self.hop_codec(idx + 1)
                 if codec is not None and pod.node_id != self.pods[idx + 1].node_id:
-                    # the receiver sees the decoded payload: lossy codecs
-                    # really alter the activations crossing the wire
-                    x = codec.transcode(x)
+                    if codec.name in getattr(self.executor, "fused_codecs", ()):
+                        # the receiving stage decodes inside its first op
+                        # (fused dequant-matmul): hand over the wire payload
+                        from repro.dataplane.base import EncodedActivation
+
+                        x = EncodedActivation(codec, codec.encode(x))
+                    else:
+                        # the receiver sees the decoded payload: lossy codecs
+                        # really alter the activations crossing the wire
+                        x = codec.transcode(x)
         return x, StepTrace(compute_s, link_s)
 
     def mark_node_failed(self, node_id: int) -> list[Pod]:

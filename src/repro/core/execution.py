@@ -1,0 +1,34 @@
+"""Execution knob: which compute path the deployed executors and codecs run.
+
+One frozen value threaded from ``DeploymentSpec`` through ``deploy()`` down
+to the stage executors (``core.model_zoo``), the gpipe send/recv path
+(``runtime.pipeline.make_gpipe``), and the per-link codecs
+(``dataplane.codecs.Int8Codec``):
+
+- ``use_pallas=False`` (default): pure-jnp reference paths -- what the
+  planner's dry-run lowers and what CPU-only CI runs fastest.
+- ``use_pallas=True, interpret=True``: the Pallas TPU kernels executed by
+  the Pallas interpreter -- numerically the deployment artifact, runnable
+  on CPU.  This is the CI fast-path leg.
+- ``use_pallas=True, interpret=False``: the compiled TPU kernels.
+
+Lives in ``core`` (no jax imports) so every layer can depend on it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ExecutionKnob:
+    use_pallas: bool = False
+    interpret: bool = False
+
+    def kwargs(self) -> dict:
+        """The kwargs every kernel entry point accepts, ready to splat."""
+        return {"use_pallas": self.use_pallas, "interpret": self.interpret}
+
+
+REF = ExecutionKnob()
+PALLAS_INTERPRET = ExecutionKnob(use_pallas=True, interpret=True)

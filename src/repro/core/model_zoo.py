@@ -194,18 +194,20 @@ def demo_mlp(d: int = 32, n_layers: int = 8):
 
 
 def demo_ssm(d: int = 24, n_layers: int = 6, seq: int = 8, heads: int = 2,
-             state: int = 4):
+             state: int = 4, *, use_pallas: bool = False,
+             interpret: bool = False):
     """An executable state-space demo model (Mamba2-style mixing layers).
 
     The multi-tenant tests/benchmarks need a second small model whose layer
     shapes genuinely differ from ``demo_mlp`` -- same ``(graph,
     executor_for_version)`` contract, but each layer is a selective-state
-    scan riding the ``kernels/ssm_scan`` reference path (``ssd_chunked``
-    with ``use_pallas=False``): input/output projections plus the chunked
-    SSD recurrence, with a residual + tanh around it.  Activations flow
-    between layers as ``(seq, d)`` float32, so ``out_bytes = seq * d * 4``
-    and per-layer params are the B/C/dt projections -- both distinct from
-    the MLP's ``d x d`` blocks.
+    scan riding ``kernels/ssm_scan``'s ``ssd_chunked``: input/output
+    projections plus the chunked SSD recurrence, with a residual + tanh
+    around it.  ``use_pallas``/``interpret`` (the deployment execution
+    knob, ``repro.core.execution``) select the Pallas SSD kernel vs its
+    jnp ref.  Activations flow between layers as ``(seq, d)`` float32, so
+    ``out_bytes = seq * d * 4`` and per-layer params are the B/C/dt
+    projections -- both distinct from the MLP's ``d x d`` blocks.
     """
     import jax
     import jax.numpy as jnp
@@ -245,11 +247,112 @@ def demo_ssm(d: int = 24, n_layers: int = 6, seq: int = 8, heads: int = 2,
             bm = xb @ wb[i]
             cm = xb @ wc[i]
             dt = jax.nn.softplus(xb @ wd[i])
-            y = ssd_chunked(xs, bm, cm, dt, jnp.asarray(a), chunk=seq)
+            y = ssd_chunked(xs, bm, cm, dt, jnp.asarray(a), chunk=seq,
+                            use_pallas=use_pallas, interpret=interpret)
             return jnp.tanh(xb + y.reshape(n, seq, d)).reshape(x.shape)
 
         return make_layer_executor(
             [lambda x, i=i: layer(x, i) for i in range(n_layers)]
         )
+
+    return graph, executor_for_version
+
+
+def demo_transformer(d: int = 32, n_layers: int = 4, seq: int = 256,
+                     heads: int = 4, kv_heads: int = 2, mlp_mult: int = 2,
+                     window: int = 128, softcap: float = 50.0,
+                     attn_block: int = 128, *, use_pallas: bool = False,
+                     interpret: bool = False):
+    """An executable transformer demo model on the flash-attention kernels.
+
+    Architecture knobs are scaled-down ``configs.archs.GEMMA2_27B``: GQA at
+    ratio 2 (``heads=4, kv_heads=2`` mirroring 32/16), logit softcap 50.0,
+    and gemma2's local/global alternation -- odd layers attend through a
+    sliding window, even layers globally.  Every layer's attention runs
+    ``kernels.flash_attention`` (blocked layout; the Pallas TPU kernel when
+    the execution knob says ``use_pallas``), so this is the model that puts
+    real attention compute on the serving hot path.
+
+    Each layer's FIRST op is ``x @ Wqkv`` and nothing else reads ``x``, so
+    when the inbound link codec is int8 the layer's fused handler (the
+    ``fused`` attribute consumed by ``make_layer_executor``) feeds the wire
+    payload straight into ``kernels.quantize.dequant_matmul`` -- the
+    dequantized activation is never materialized.  Activations are
+    ``(seq, d)`` float32 between layers.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.graph import chain
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.quantize import dequant_matmul
+    from repro.runtime.pipeline import make_layer_executor
+
+    if d % heads or heads % kv_heads:
+        raise ValueError(f"need d % heads == 0 and heads % kv_heads == 0, "
+                         f"got d={d}, heads={heads}, kv_heads={kv_heads}")
+    hd = d // heads
+    proj = (heads + 2 * kv_heads) * hd  # fused q|k|v projection width
+    f = mlp_mult * d
+    act_bytes = seq * d * ACT_BYTES
+    param_bytes = (d * proj + d * d + 2 * d * f) * 4
+    graph = chain(
+        f"transformer{n_layers}", [(param_bytes, act_bytes)] * n_layers,
+        in_bytes=act_bytes,
+    )
+
+    def executor_for_version(version: int):
+        key = jax.random.fold_in(jax.random.PRNGKey(version), 0xA77)
+        kq, ko, k1, k2 = jax.random.split(key, 4)
+        wqkv = np.asarray(jax.random.normal(kq, (n_layers, d, proj)) * 0.3)
+        wo = np.asarray(jax.random.normal(ko, (n_layers, d, d)) * 0.3)
+        w1 = np.asarray(jax.random.normal(k1, (n_layers, d, f)) * 0.3)
+        w2 = np.asarray(jax.random.normal(k2, (n_layers, f, d)) * 0.3)
+
+        def tail(qkv, out_shape, i, win):
+            # everything after the qkv projection: attention + out-proj +
+            # gelu MLP, residual around the MLP, tanh to keep depth stable
+            qkvb = jnp.asarray(qkv, jnp.float32).reshape(-1, seq, proj)
+            n = qkvb.shape[0]
+            qh = qkvb[..., : heads * hd].reshape(n, seq, heads, hd)
+            kk = qkvb[..., heads * hd : (heads + kv_heads) * hd]
+            vv = qkvb[..., (heads + kv_heads) * hd :]
+            o = flash_attention(
+                qh,
+                kk.reshape(n, seq, kv_heads, hd),
+                vv.reshape(n, seq, kv_heads, hd),
+                causal=True, window=win, softcap=softcap, block=attn_block,
+                use_pallas=use_pallas, interpret=interpret,
+            )
+            y = o.reshape(n, seq, d) @ wo[i]
+            z = y + jax.nn.gelu(y @ w1[i]) @ w2[i]
+            return jnp.tanh(z).reshape(out_shape)
+
+        def make_layer(i):
+            # gemma2-style alternation: odd layers local (sliding window)
+            win = window if (window > 0 and i % 2 == 1) else 0
+
+            def layer_fn(x):
+                x = jnp.asarray(x, jnp.float32)
+                qkv = x.reshape(-1, seq, d) @ wqkv[i]
+                return tail(qkv, x.shape, i, win)
+
+            def fused_int8(enc):
+                # enc: dataplane EncodedActivation with an Int8Codec payload
+                if enc.payload[0] != "jax":
+                    return layer_fn(enc.decode())
+                _, q, s, _dtype = enc.payload
+                qkv = dequant_matmul(
+                    q, s, jnp.asarray(wqkv[i]), dtype=jnp.float32,
+                    block=enc.codec.block, use_pallas=use_pallas,
+                    interpret=interpret,
+                )
+                return tail(qkv, q.shape, i, win)
+
+            layer_fn.fused = {"int8": fused_int8}
+            return layer_fn
+
+        return make_layer_executor([make_layer(i) for i in range(n_layers)])
 
     return graph, executor_for_version

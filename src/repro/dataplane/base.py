@@ -24,10 +24,30 @@ it is literally the bound the quantize-kernel tests assert
 
 from __future__ import annotations
 
+import copy
+import dataclasses
 import math
 from typing import Any, Sequence
 
 F32_BYTES = 4.0  # the simulator's byte model: f32 activations on the wire
+
+
+@dataclasses.dataclass
+class EncodedActivation:
+    """A still-encoded boundary activation handed to a receiving stage.
+
+    When the receiving stage's executor advertises a fused decode for the
+    link's codec (``executor.fused_codecs``), the engine skips the eager
+    ``decode`` half of ``transcode`` and passes the wire payload through --
+    the stage's first op consumes it directly (e.g. int8 ->
+    ``kernels.quantize.dequant_matmul``).  ``decode()`` is the always-correct
+    fallback for any consumer that needs the plain array."""
+
+    codec: "Codec"
+    payload: Any
+
+    def decode(self) -> Any:
+        return self.codec.decode(self.payload)
 
 
 class Codec:
@@ -51,6 +71,19 @@ class Codec:
         applies this when a transfer completes, so lossy codecs really do
         alter the activations flowing through the pipeline."""
         return self.decode(self.encode(x))
+
+    def configured(self, **attrs: Any) -> "Codec":
+        """A shallow copy with ``attrs`` overridden (e.g. the execution
+        knob's ``use_pallas``/``interpret``).  The registry's singletons stay
+        untouched; unknown attributes are rejected so a typo can't silently
+        configure nothing."""
+        for k in attrs:
+            if not hasattr(self, k):
+                raise AttributeError(f"codec {self.name!r} has no attribute {k!r}")
+        dup = copy.copy(self)
+        for k, v in attrs.items():
+            setattr(dup, k, v)
+        return dup
 
     # -- byte model ----------------------------------------------------------
     def wire_ratio(self, elem_bytes: float = F32_BYTES) -> float:

@@ -106,10 +106,15 @@ class Int8Codec(Codec):
     error_bound = INT8_MAX_REL_ERROR
     encode_flops_per_byte = 1.5  # abs/max-reduce/div/round/clip per element
     decode_flops_per_byte = 0.5  # mul + cast per element
+    # execution knob (see repro.core.execution): deployments flip these via
+    # ``configured()`` so the registry singleton keeps the ref defaults
+    use_pallas = False
+    interpret = False
 
     def encode(self, x):
         if _HAVE_JAX_QUANTIZE and _is_jax(x):
-            q, s = quantize_int8(x, block=self.block)
+            q, s = quantize_int8(x, block=self.block, use_pallas=self.use_pallas,
+                                 interpret=self.interpret)
             return "jax", q, s, x.dtype
         x = np.asarray(x)
         q, s = _np_quantize(x, self.block)
@@ -118,7 +123,9 @@ class Int8Codec(Codec):
     def decode(self, payload):
         kind, q, s, dtype = payload
         if kind == "jax":
-            return dequantize_int8(q, s, dtype=dtype, block=self.block)
+            return dequantize_int8(q, s, dtype=dtype, block=self.block,
+                                   use_pallas=self.use_pallas,
+                                   interpret=self.interpret)
         return _np_dequantize(q, s, self.block).astype(dtype)
 
     def wire_ratio(self, elem_bytes: float = 4.0) -> float:

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.flash_attention.kernel import flash_attention_tpu
 from repro.kernels.flash_attention.ref import attention_ref
 
 DEFAULT_BLOCK = 1024
@@ -402,14 +403,15 @@ def _make_flash(causal: bool, window: int, softcap: float, block: int,
         return o, (q, k, v, o, lse)
 
     def bwd(res, do):
+        # o/do arrive in the configured layout (fwd saved them as returned),
+        # and _backward both consumes and emits that layout -- its D
+        # computation and grad reshapes branch on cfg["layout"] internally,
+        # so no per-layout staging is needed here.  Grouped-layout gradient
+        # parity vs attention_ref is pinned in tests/test_kernels.py.
         q, k, v, o, lse = res
         hd = q.shape[-1]
         bcfg = dict(cfg, scale=hd**-0.5)
-        if layout == "blocked":
-            o_nat, do_nat = o, do
-        else:
-            o_nat, do_nat = o, do  # grouped path computes D in grouped layout
-        dq, dk, dv = _backward(q, k, v, o_nat, lse, do_nat, bcfg)
+        dq, dk, dv = _backward(q, k, v, o, lse, do, bcfg)
         return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
     fn.defvjp(fwd, bwd)
@@ -435,10 +437,27 @@ def flash_attention(
     softcap: float = 0.0,
     block: int = DEFAULT_BLOCK,
     layout: str = "blocked",
+    use_pallas: bool = False,
+    interpret: bool = False,
 ) -> jax.Array:
-    """Blockwise attention; falls back to the naive ref at tiny shapes."""
+    """Blockwise attention; falls back to the naive ref at tiny shapes.
+
+    ``use_pallas=True`` dispatches the forward pass to the Pallas TPU kernel
+    (``interpret=True`` runs it on CPU for CI) when the sequence lengths
+    divide the block size; it is forward-only, which is what the serving
+    executors need.  Shapes the kernel can't tile -- or any gradient use --
+    take the jnp blockwise path below, which has a custom VJP."""
     b, sq, h, hd = q.shape
     skv, kh = k.shape[1], k.shape[2]
+    if use_pallas:
+        bq, bk = min(block, sq), min(block, skv)
+        # self-attention only: the TPU kernel's grid pairs q/kv blocks by
+        # index, so cross-length (sq != skv) shapes take the jnp path
+        if sq == skv and sq % bq == 0 and skv % bk == 0:
+            return flash_attention_tpu(
+                q, k, v, causal=causal, window=window, softcap=softcap,
+                block_q=bq, block_k=bk, interpret=interpret,
+            )
     c = _block_for(sq, skv, block, causal and window == 0)
     if c is None or sq < 2 * 128:
         return attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)

@@ -1,4 +1,4 @@
-from repro.kernels.quantize.ops import dequantize_int8, quantize_int8
+from repro.kernels.quantize.ops import dequant_matmul, dequantize_int8, quantize_int8
 from repro.kernels.quantize.ref import INT8_MAX_REL_ERROR
 
-__all__ = ["quantize_int8", "dequantize_int8", "INT8_MAX_REL_ERROR"]
+__all__ = ["quantize_int8", "dequantize_int8", "dequant_matmul", "INT8_MAX_REL_ERROR"]

@@ -34,6 +34,16 @@ def _dequant_kernel(q_ref, s_ref, x_ref, *, block: int):
     x_ref[...] = x.reshape(rows, d).astype(x_ref.dtype)
 
 
+def _dqmm_kernel(q_ref, s_ref, w_ref, o_ref, *, block: int):
+    rows, d = q_ref.shape
+    qb = q_ref[...].reshape(rows, d // block, block).astype(jnp.float32)
+    x = (qb * s_ref[...][..., None]).reshape(rows, d)
+    o_ref[...] = jax.lax.dot_general(
+        x, w_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
 def quantize_int8_tpu(
     x: jax.Array, block: int = 256, row_tile: int = 256, interpret: bool = False
 ) -> tuple[jax.Array, jax.Array]:
@@ -107,3 +117,53 @@ def dequantize_int8_tpu(
         interpret=interpret,
     )(q2, s2)
     return x[:, :d].reshape(*lead, d)
+
+
+def dequant_matmul_tpu(
+    q: jax.Array, scale: jax.Array, w: jax.Array, dtype=None,
+    row_tile: int = 256, interpret: bool = False, block: int | None = None,
+) -> jax.Array:
+    """Fused dequantize-into-matmul: ``dequant(q, scale) @ w`` per row tile.
+
+    The int8 tile is widened and scaled in VMEM and fed straight to the MXU
+    -- the dequantized activation never round-trips through HBM, which is
+    the whole point of receiving a quantized boundary activation.  ``w``
+    (d, dout) rides whole in VMEM; its rows are zero-padded alongside a
+    ragged ``q`` trailing dim (padded q is zero, so the extra rows are
+    inert either way)."""
+    *lead, d = q.shape
+    nb = scale.shape[-1]
+    if block is None:
+        if d % nb:
+            raise ValueError(
+                f"trailing dim {d} is ragged over {nb} scale blocks; "
+                f"pass the block= used to quantize"
+            )
+        block = d // nb
+    dp = nb * block
+    dout = w.shape[-1]
+    n = 1
+    for s in lead:
+        n *= s
+    q2 = q.reshape(n, d)
+    w2 = w
+    if dp != d:
+        q2 = jnp.pad(q2, ((0, 0), (0, dp - d)))
+        w2 = jnp.pad(w, ((0, dp - d), (0, 0)))
+    s2 = scale.reshape(n, nb)
+    rt = min(row_tile, n)
+    if n % rt:
+        rt = n
+    o = pl.pallas_call(
+        functools.partial(_dqmm_kernel, block=block),
+        grid=(n // rt,),
+        in_specs=[
+            pl.BlockSpec((rt, dp), lambda i: (i, 0)),
+            pl.BlockSpec((rt, nb), lambda i: (i, 0)),
+            pl.BlockSpec((dp, dout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dout), w.dtype if dtype is None else dtype),
+        interpret=interpret,
+    )(q2, s2, w2)
+    return o.reshape(*lead, dout)

@@ -12,8 +12,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.quantize.kernel import dequantize_int8_tpu, quantize_int8_tpu
-from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+from repro.kernels.quantize.kernel import (
+    dequant_matmul_tpu,
+    dequantize_int8_tpu,
+    quantize_int8_tpu,
+)
+from repro.kernels.quantize.ref import dequant_matmul_ref, dequantize_ref, quantize_ref
 
 
 @partial(jax.jit, static_argnames=("block", "use_pallas", "interpret"))
@@ -35,3 +39,21 @@ def dequantize_int8(
         return dequantize_int8_tpu(q, scale, dtype=dtype, block=block,
                                    interpret=interpret)
     return dequantize_ref(q, scale, dtype=dtype, block=block)
+
+
+@partial(jax.jit, static_argnames=("dtype", "block", "use_pallas", "interpret"))
+def dequant_matmul(
+    q: jax.Array, scale: jax.Array, w: jax.Array, dtype=None, *,
+    block: int | None = None, use_pallas: bool = False, interpret: bool = False,
+) -> jax.Array:
+    """``dequantize_int8(q, scale) @ w`` as one fused dispatch.
+
+    The receiving stage of an int8-coded link feeds its first matmul straight
+    from the wire payload -- no separate decode pass materializing the f32
+    activation.  The ref path is a single jit region (XLA fuses the scale
+    multiply into the matmul operand); the Pallas path dequantizes in VMEM
+    feeding the MXU directly."""
+    if use_pallas:
+        return dequant_matmul_tpu(q, scale, w, dtype=dtype, block=block,
+                                  interpret=interpret)
+    return dequant_matmul_ref(q, scale, w, dtype=dtype, block=block)

@@ -65,3 +65,22 @@ def dequantize_ref(
     qp, _ = _pad_to_block(q, block)
     xb = qp.reshape(*lead, nb, block).astype(jnp.float32) * scale[..., None]
     return xb.reshape(*lead, nb * block)[..., :d].astype(dtype)
+
+
+def dequant_matmul_ref(
+    q: jax.Array,
+    scale: jax.Array,
+    w: jax.Array,
+    dtype=None,
+    block: int | None = None,
+) -> jax.Array:
+    """Fused-op oracle: ``dequantize_ref(q, scale) @ w`` in one f32 pass.
+
+    ``q`` is (..., d) int8 with blockwise ``scale`` (..., ceil(d/block));
+    ``w`` is (d, dout).  The product is accumulated in f32 and cast to
+    ``dtype`` (default: ``w.dtype``), so the result carries exactly the
+    int8 round-trip error of the activations -- the matmul adds only f32
+    rounding on top of the ``INT8_MAX_REL_ERROR`` contract."""
+    x = dequantize_ref(q, scale, dtype=jnp.float32, block=block)
+    out = x @ w.astype(jnp.float32)
+    return out.astype(w.dtype if dtype is None else dtype)

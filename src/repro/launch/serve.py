@@ -32,9 +32,26 @@ from repro.cluster import NodeFailed
 from repro.dataplane import list_codecs
 from repro.workload import list_traces
 from repro.configs import ARCHS, get_config, reduced
-from repro.core.model_zoo import demo_mlp
+from repro.core.model_zoo import demo_mlp, demo_ssm, demo_transformer
 from repro.models import lm
 from repro.runtime.serve import make_serve_step
+
+
+def _zoo(model: str, width: int, *, use_pallas: bool = False,
+         interpret: bool = False):
+    """(graph, executor_for_version, demo input) for a zoo model name.
+
+    The execution knob reaches the executors here (the spec's knob fields
+    cover the codec side); demo_mlp has no kernel path, so it ignores it.
+    """
+    if model in ("demo_ssm", "ssm"):
+        graph, ex = demo_ssm(use_pallas=use_pallas, interpret=interpret)
+        return graph, ex, jnp.ones((8, 24)) * 0.1
+    if model in ("demo_transformer", "transformer"):
+        graph, ex = demo_transformer(use_pallas=use_pallas, interpret=interpret)
+        return graph, ex, jnp.ones((256, 32)) * 0.1
+    graph, ex = demo_mlp(d=width)
+    return graph, ex, jnp.ones((width,)) * 0.1
 
 
 def serve_edge(
@@ -58,6 +75,9 @@ def serve_edge(
     autoscale: bool = False,
     max_batch: int | None = None,
     admission_depth: int | None = None,
+    model: str = "demo_mlp",
+    use_pallas: bool = False,
+    interpret: bool = False,
 ) -> int:
     """Edge-cluster serving demo: deploy(spec) -> stream -> kill -> recover.
 
@@ -66,7 +86,8 @@ def serve_edge(
     latency percentile report at the end.  ``autoscale`` turns on
     backlog-driven replica scaling over the planner's widest feasible split.
     """
-    graph, executor_for_version = demo_mlp(d=width)
+    graph, executor_for_version, x0 = _zoo(
+        model, width, use_pallas=use_pallas, interpret=interpret)
     capacity = graph.total_param_bytes * capacity_frac
 
     arrival = None
@@ -91,6 +112,8 @@ def serve_edge(
         admission_depth=admission_depth,
         arrival=arrival,
         autoscale=AutoscaleSpec() if autoscale else None,
+        use_pallas=use_pallas,
+        interpret=interpret,
     )
     d = deploy(spec)
     names = dict(d.plan.strategies)
@@ -106,14 +129,13 @@ def serve_edge(
               f"predicted {d.plan.predicted_throughput:.1f} microbatch/s, "
               f"link codecs {list(d.plan.codecs)}")
     if trace is not None:
-        requests = len(d.submit_trace(
-            make_input=lambda i, a: jnp.ones((width,)) * 0.1))
+        requests = len(d.submit_trace(make_input=lambda i, a: x0))
         print(f"open-loop trace '{trace}': {requests} arrivals over "
               f"{duration_s:g}s at nominal {rate:g} req/s"
               + (", autoscaling" if autoscale else ""))
     else:
         for _ in range(requests):
-            d.submit(jnp.ones((width,)) * 0.1)
+            d.submit(x0)
     half = requests // 2
     killed = half == 0  # nothing to kill mid-stream on a tiny run
     pending_arrivals = lambda: getattr(d.loop, "pending_arrivals", 0)  # noqa: E731
@@ -177,6 +199,8 @@ def _tenant_input(model: str):
     """A correctly-shaped demo payload for each zoo model name."""
     if model in ("demo_ssm", "ssm"):
         return jnp.ones((8, 24)) * 0.1
+    if model in ("demo_transformer", "transformer"):
+        return jnp.ones((256, 32)) * 0.1
     return jnp.ones((32,)) * 0.1
 
 
@@ -271,6 +295,15 @@ def main() -> int:
                     help="edge mode per-node capacity as a fraction of model bytes")
     ap.add_argument("--width", type=int, default=32,
                     help="edge mode demo-MLP width (d)")
+    ap.add_argument("--model", default="demo_mlp",
+                    choices=("demo_mlp", "demo_ssm", "demo_transformer"),
+                    help="edge mode zoo model to serve (demo_transformer and "
+                         "demo_ssm run kernel-backed executors)")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route model executors and int8 link codecs through "
+                         "the Pallas TPU kernels")
+    ap.add_argument("--interpret", action="store_true",
+                    help="run Pallas kernels in interpret mode (CPU CI)")
     ap.add_argument("--serving", default="pipelined",
                     choices=("pipelined", "sync"),
                     help="edge mode serving engine (discrete-event pipeline "
@@ -341,6 +374,8 @@ def main() -> int:
             trace=args.trace, rate=args.rate, duration_s=args.duration,
             autoscale=args.autoscale, max_batch=args.max_batch,
             admission_depth=args.admission_depth,
+            model=args.model, use_pallas=args.use_pallas,
+            interpret=args.interpret,
         )
     if not args.arch:
         ap.error("--arch is required unless --edge is given")

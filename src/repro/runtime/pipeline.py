@@ -27,10 +27,12 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.bottleneck import service_times
+from repro.core.bottleneck import evaluate_pipeline
+from repro.core.execution import ExecutionKnob
 from repro.core.graph import LayerGraph
 from repro.core.partitioner import partition_exact_k
 from repro.core.placement import CommGraph, place_optimal
+from repro.dataplane.base import EncodedActivation
 from repro.kernels.quantize import dequantize_int8, quantize_int8
 
 
@@ -83,8 +85,13 @@ def plan_pipeline(
     )
     if not place.feasible:
         raise ValueError("no feasible stage placement on the pod graph")
-    compute_s, link_s = service_times(
-        part.partitions, place.path, pod_bw, flops_per_node=device_flops
+    # ONE steady-state definition: est_period_s IS
+    # core.bottleneck.PipelineMetrics.pipeline_period on the same inputs --
+    # max over every serial resource (stage compute times and link
+    # latencies), the cadence of a full pipe.  tests/test_pipeline_multidev.py
+    # pins the two against each other so they cannot drift apart again.
+    metrics = evaluate_pipeline(
+        part.partitions, place.path, comm, device_flops=device_flops
     )
     return PipelinePlan(
         n_stages=n_stages,
@@ -92,7 +99,7 @@ def plan_pipeline(
         stage_order=place.path,
         bottleneck_bytes=float(max(part.boundaries, default=0)),
         est_bottleneck_s=float(place.bottleneck_latency),
-        est_period_s=float(max(compute_s + link_s, default=0.0)),
+        est_period_s=float(metrics.pipeline_period),
     )
 
 
@@ -109,6 +116,7 @@ def make_gpipe(
     compress: bool = False,
     quant_block: int = 256,
     stage_order: tuple[int, ...] | None = None,
+    execution: ExecutionKnob | None = None,
 ):
     """Build a pipelined forward: (stage_params, x (n_micro, mb, ...)) -> y.
 
@@ -120,20 +128,25 @@ def make_gpipe(
     ``stage_order[j]`` = mesh position hosting logical stage j; the
     ppermute route follows it, so the heaviest boundary rides the link the
     placement chose.
+
+    ``execution`` (``repro.core.execution.ExecutionKnob``) selects the
+    quantize path for the compressed send -- the same knob a
+    ``DeploymentSpec`` threads to the edge engines' codecs.
     """
     n_stages = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     order = list(stage_order) if stage_order is not None else list(range(n_stages))
     perm = [(order[j], order[j + 1]) for j in range(n_stages - 1)]
     # logical stage index of each mesh position
     logical = np.argsort(np.asarray(order))
+    ex_kw = execution.kwargs() if execution is not None else {}
 
     def _send(x):
         if not compress:
             return jax.lax.ppermute(x, axis, perm)
-        q, s = quantize_int8(x, quant_block)
+        q, s = quantize_int8(x, quant_block, **ex_kw)
         q = jax.lax.ppermute(q, axis, perm)
         s = jax.lax.ppermute(s, axis, perm)
-        return dequantize_int8(q, s, dtype=x.dtype)
+        return dequantize_int8(q, s, dtype=x.dtype, **ex_kw)
 
     def pipe(stage_params, x):
         local = jax.tree.map(lambda t: t[0], stage_params)  # strip stage dim
@@ -191,13 +204,37 @@ def make_layer_executor(layer_fns: list[Callable[[jax.Array], jax.Array]]):
     the bridge that lets the TPU-side stage functions (or any per-layer jnp
     closures) serve through the simulated pod chain, so the serving loop's
     microbatches exercise identical math on both backends.
+
+    **Fused decode protocol.**  A layer fn may carry a ``fused`` attribute --
+    a ``{codec_name: handler}`` dict whose handler consumes a still-encoded
+    boundary activation (``dataplane.base.EncodedActivation``) directly,
+    e.g. int8 wire payloads feeding ``kernels.quantize.dequant_matmul``
+    instead of a separate dequantize pass.  The executor advertises
+    ``executor.fused_codecs`` -- codec names EVERY layer can consume, so the
+    engine's gating stays correct for any partition cut point -- and
+    transparently falls back to ``EncodedActivation.decode()`` when the
+    entry layer has no handler.
     """
+    fused_codecs: frozenset[str] | None = None
+    for fn in layer_fns:
+        keys = frozenset(getattr(fn, "fused", {}) or {})
+        fused_codecs = keys if fused_codecs is None else fused_codecs & keys
 
     def executor(start: int, stop: int, x):
+        if isinstance(x, EncodedActivation):
+            handler = None
+            if start < stop:
+                handler = getattr(layer_fns[start], "fused", {}).get(x.codec.name)
+            if handler is not None:
+                x = handler(x)
+                start += 1
+            else:
+                x = x.decode()
         for i in range(start, stop):
             x = layer_fns[i](x)
         return x
 
+    executor.fused_codecs = fused_codecs or frozenset()
     return executor
 
 

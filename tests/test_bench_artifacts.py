@@ -190,6 +190,35 @@ def test_multi_tenant_benchmark_emits_a_valid_canonical_artifact(
     assert payload["cluster"]["policy"] == "partition"
 
 
+def test_kernel_path_benchmark_emits_a_valid_canonical_artifact(
+        tmp_path, monkeypatch):
+    """End to end: the kernel fast-path gate writes one schema-valid BENCH_
+    artifact whose rows pin kernel-vs-ref parity (int8 round-trip within
+    INT8_MAX_REL_ERROR, flash within its documented bound, fused == unfused
+    dequant-matmul) and fused <= unfused service time.  run() raises on any
+    violated pin, so a green artifact IS the acceptance evidence."""
+    from benchmarks import kernel_path
+
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path)
+    # loose timing slack: tier-1 pins schema + numerics; the tight 1.05
+    # timing gate runs in CI's dedicated benchmark step with full reps
+    payload = kernel_path.run(reps=3, timing_slack=2.0)
+    (path,) = tmp_path.iterdir()
+    assert path.name == f"{ARTIFACT_PREFIX}kernel_path.json"
+    disk = json.loads(path.read_text())
+    validate_payload(path.stem, disk)
+    checks = {r["check"]: r for r in disk["rows"]}
+    assert set(checks) == {
+        "int8_roundtrip_rel_err", "flash_interpret_max_abs_err",
+        "fused_vs_unfused_rel_err", "fused_pallas_interpret_rel_err",
+        "e2e_pallas_vs_ref_rel_err", "fused_over_unfused_time_ratio",
+    }
+    assert all(r["ok"] for r in disk["rows"])
+    assert checks["int8_roundtrip_rel_err"]["bound"] == payload[
+        "int8_max_rel_error"]
+    assert disk["fused_ms"] > 0 and disk["unfused_ms"] > 0
+
+
 def test_deployment_metrics_are_normalized_json(tmp_path):
     """The metrics facades run through ``normalize_metrics``: every dict key
     is a str and the whole payload survives a strict-JSON round trip
@@ -235,8 +264,8 @@ def test_every_benchmark_declares_its_artifact_name():
 
     for mod in ("algo_scaling", "approx_ratio", "bandwidth_sweep",
                 "churn_throughput", "fig3_bottleneck", "joint_opt",
-                "kernel_bench", "latency_pareto", "multi_tenant",
-                "replica_scaling", "throughput_scaling"):
+                "kernel_bench", "kernel_path", "latency_pareto",
+                "multi_tenant", "replica_scaling", "throughput_scaling"):
         m = importlib.import_module(f"benchmarks.{mod}")
         assert isinstance(m.ARTIFACT, str) and m.ARTIFACT, mod
 

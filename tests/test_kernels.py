@@ -36,30 +36,53 @@ SWEEP = [
 ]
 
 
+@pytest.mark.parametrize("layout", ["blocked", "grouped"])
 @pytest.mark.parametrize("case", SWEEP)
-def test_flash_forward_matches_ref(case):
+def test_flash_forward_matches_ref(case, layout):
     b, sq, skv, h, kh, hd, causal, window, softcap, block, dtype = case
     q, k, v = _qkv(b, sq, skv, h, kh, hd, dtype)
     out = flash_attention(q, k, v, causal=causal, window=window,
-                          softcap=softcap, block=block)
+                          softcap=softcap, block=block, layout=layout)
     ref = attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("layout", ["blocked", "grouped"])
 @pytest.mark.parametrize("case", SWEEP[:5])
-def test_flash_grads_match_ref(case):
+def test_flash_grads_match_ref(case, layout):
+    """Gradient parity vs attention_ref for BOTH layouts.  The grouped leg
+    pins the custom-VJP backward on grouped-layout residuals -- the path the
+    dead identical-branch staging in ``bwd`` used to (not) special-case."""
     b, sq, skv, h, kh, hd, causal, window, softcap, block, dtype = case
     q, k, v = _qkv(b, sq, skv, h, kh, hd, jnp.float32)
     kw = dict(causal=causal, window=window, softcap=softcap)
-    gf = jax.grad(lambda *a: (flash_attention(*a, block=block, **kw) ** 2).sum(),
+    gf = jax.grad(lambda *a: (flash_attention(*a, block=block, layout=layout,
+                                              **kw) ** 2).sum(),
                   argnums=(0, 1, 2))(q, k, v)
     gr = jax.grad(lambda *a: (attention_ref(*a, **kw) ** 2).sum(),
                   argnums=(0, 1, 2))(q, k, v)
     for a, b_ in zip(gf, gr):
         scale = max(1e-6, float(jnp.max(jnp.abs(b_))))
         assert float(jnp.max(jnp.abs(a - b_))) / scale < 1e-4
+
+
+@pytest.mark.parametrize("case", SWEEP)
+def test_flash_use_pallas_dispatch_matches_ref(case):
+    """The ops-level ``use_pallas`` knob (interpret mode) stays within the
+    documented forward tolerance vs attention_ref.  Cross-length shapes
+    (sq != skv) silently take the jnp path -- the result must be equally
+    correct either way, which is exactly what serving executors rely on."""
+    b, sq, skv, h, kh, hd, causal, window, softcap, block, dtype = case
+    q, k, v = _qkv(b, sq, skv, h, kh, hd, dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block=block,
+                          use_pallas=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
 
 
 @pytest.mark.parametrize("case", SWEEP)
@@ -176,6 +199,72 @@ def test_quantize_pallas_matches_ref():
     )
 
 
+# ---------------------------------------------------------------------------
+# fused dequant-matmul
+# ---------------------------------------------------------------------------
+
+DQMM_SWEEP = [
+    # (rows, d, dout, block, wdtype) -- incl. ragged trailing dims
+    (16, 512, 64, 128, jnp.float32),
+    (8, 300, 32, 128, jnp.float32),  # ragged: q cols + w rows get padded
+    (4, 96, 48, 256, jnp.float32),  # ragged: d < block entirely
+    (16, 512, 64, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", DQMM_SWEEP)
+def test_dequant_matmul_fused_matches_unfused(case):
+    """The fused op computes EXACTLY dequantize-then-matmul (both f32): the
+    fusion saves a materialized activation + dispatch, never accuracy."""
+    from repro.kernels.quantize import dequant_matmul, dequantize_int8
+
+    rows, d, dout, block, wdtype = case
+    k1, k2 = jax.random.split(jax.random.PRNGKey(d + dout))
+    x = jax.random.normal(k1, (rows, d), jnp.float32)
+    w = jax.random.normal(k2, (d, dout), wdtype)
+    q, s = quantize_ref(x, block)
+    unfused = dequantize_int8(q, s, dtype=jnp.float32, block=block) @ w.astype(
+        jnp.float32)
+    fused = dequant_matmul(q, s, w, dtype=jnp.float32, block=block)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("case", DQMM_SWEEP)
+def test_dequant_matmul_pallas_interpret_matches_ref(case):
+    """Pallas dequant-matmul (interpret) vs the jnp oracle on the same
+    shapes, including ragged trailing dims (zero-padded q cols keep the
+    padded w rows inert)."""
+    from repro.kernels.quantize import dequant_matmul
+
+    rows, d, dout, block, wdtype = case
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3 * d + dout))
+    x = jax.random.normal(k1, (rows, d), jnp.float32)
+    w = jax.random.normal(k2, (d, dout), wdtype)
+    q, s = quantize_ref(x, block)
+    ref = dequant_matmul(q, s, w, dtype=jnp.float32, block=block)
+    pal = dequant_matmul(q, s, w, dtype=jnp.float32, block=block,
+                         use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dequant_matmul_leading_dims_and_default_dtype():
+    """Leading batch dims flatten through the matmul; dtype defaults to w's."""
+    from repro.kernels.quantize import dequant_matmul
+
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, 4, 256), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(6), (256, 32), jnp.bfloat16)
+    q, s = quantize_ref(x, 128)
+    out = dequant_matmul(q, s, w, block=128)
+    assert out.shape == (3, 4, 32) and out.dtype == jnp.bfloat16
+    pal = dequant_matmul(q, s, w, block=128, use_pallas=True, interpret=True)
+    assert pal.shape == out.shape and pal.dtype == out.dtype
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(out, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
 def test_quantize_scale_equivariance():
     """quantize(a*x) has scales a*scale(x) and identical codes (property)."""
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 256), jnp.float32)
@@ -219,3 +308,62 @@ def test_ssd_chunk_invariance():
     y1, _ = ssd_ref(xs, bm, cm, dt, a, chunk=32)
     y2, _ = ssd_ref(xs, bm, cm, dt, a, chunk=256)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# model-zoo executors on the kernel path
+# ---------------------------------------------------------------------------
+
+def _run_executor(factory, x, **knob):
+    graph, executor_for_version = factory(**knob)
+    return executor_for_version(0)(0, len(graph.layers), x)
+
+
+@pytest.mark.parametrize("factory_name,shape", [
+    ("demo_transformer", (256, 32)),
+    ("demo_ssm", (8, 24)),
+])
+def test_zoo_executor_pallas_interpret_matches_ref(factory_name, shape):
+    """demo_transformer/demo_ssm executors produce the same activations with
+    the execution knob on (Pallas interpret) as on the jnp reference path --
+    the whole point of the knob: same math, kernel-backed."""
+    from repro.core import model_zoo
+
+    factory = getattr(model_zoo, factory_name)
+    x = jax.random.normal(jax.random.PRNGKey(9), shape, jnp.float32) * 0.5
+    y_ref = _run_executor(factory, x)
+    y_pal = _run_executor(factory, x, use_pallas=True, interpret=True)
+    assert y_pal.shape == x.shape
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_demo_transformer_fused_int8_stage_matches_decode():
+    """A stage handed an int8 EncodedActivation via the fused dequant-matmul
+    handler computes the same thing as decode-then-run, from any cut."""
+    from repro.core.model_zoo import demo_transformer
+    from repro.dataplane import get_codec
+    from repro.dataplane.base import EncodedActivation
+
+    graph, executor_for_version = demo_transformer()
+    ex = executor_for_version(0)
+    n = len(graph.layers)
+    assert "int8" in ex.fused_codecs
+    codec = get_codec("int8")
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(11), (256, 32))) * 0.5
+    x = ex(0, 2, x)  # realistic mid-pipeline activation
+    enc = EncodedActivation(codec, codec.encode(np.asarray(x)))
+    for start in (2, n - 1):
+        fused = ex(start, n, enc)
+        decoded = ex(start, n, enc.decode())
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(decoded),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_demo_mlp_has_no_fused_codecs():
+    """Executors without per-layer fused handlers advertise none, so the
+    serving engines keep transcoding on the wire for them."""
+    from repro.core.model_zoo import demo_mlp
+
+    _, executor_for_version = demo_mlp()
+    assert executor_for_version(0).fused_codecs == frozenset()

@@ -57,6 +57,18 @@ SCRIPT = textwrap.dedent(
         y = pipe(reorder_stage_params(stage_ws, plan), x)
     err = float(jnp.max(jnp.abs(y - ref)))
     assert 0 < err < 0.05, f"compressed pipeline err {err}"
+
+    # same int8 boundaries through the Pallas kernels (interpret mode): the
+    # execution knob reaches the quantized send path, and the kernel emits
+    # the same codes as the jnp oracle, so the outputs agree to fp noise
+    from repro.core.execution import PALLAS_INTERPRET
+    pipe = make_gpipe(stage_fn, mesh, axis="stage", n_micro=n_micro,
+                      compress=True, quant_block=32,
+                      stage_order=plan.stage_order, execution=PALLAS_INTERPRET)
+    with mesh:
+        y2 = pipe(reorder_stage_params(stage_ws, plan), x)
+    knob_err = float(jnp.max(jnp.abs(y2 - y)))
+    assert knob_err < 1e-6, f"pallas-interpret knob diverged: {knob_err}"
     print("PIPELINE_OK")
     """
 )
@@ -71,3 +83,34 @@ def test_gpipe_four_stages():
         cwd=repo,
     )
     assert "PIPELINE_OK" in proc.stdout, proc.stdout + proc.stderr
+
+
+def test_plan_period_is_bottleneck_pipeline_period():
+    """plan_pipeline.est_period_s IS core.bottleneck's pipeline_period on the
+    same partitions/path/comm -- ONE steady-state definition shared with the
+    edge serving engine, pinned here so the two cannot drift apart."""
+    import numpy as np
+
+    from repro.core.bottleneck import evaluate_pipeline
+    from repro.core.graph import chain
+    from repro.core.partitioner import partition_exact_k
+    from repro.core.placement import CommGraph
+    from repro.runtime.pipeline import plan_pipeline
+
+    d = 32
+    g = chain("mlp", [(d * d * 4, 16 * d * 4)] * 8)
+    pod_bw = np.array(
+        [[0, 10e9, 1e9, 1e9], [10e9, 0, 5e9, 1e9],
+         [1e9, 5e9, 0, 2e9], [1e9, 1e9, 2e9, 0]], float)
+    cap = 2 * d * d * 4
+    plan = plan_pipeline(g, 4, stage_capacity=cap, pod_bw=pod_bw,
+                         device_flops=1e9)
+    part = partition_exact_k(g, cap, 4)
+    comm = CommGraph(bw=pod_bw, node_capacity=np.full(4, float(cap)))
+    metrics = evaluate_pipeline(part.partitions, list(plan.stage_order), comm,
+                                device_flops=1e9)
+    assert plan.est_period_s == float(metrics.pipeline_period)
+    assert plan.est_period_s > 0.0
+    # the period dominates the pure link bottleneck (it maxes over links AND
+    # stage compute), never undercuts it
+    assert plan.est_period_s >= plan.est_bottleneck_s
