@@ -1,0 +1,339 @@
+"""Observability-plane gate: tracer overhead, attribution exactness, pins.
+
+Five properties of the ``repro.obs`` plane, each persisted as a pinned row
+(the same ``{check, value, bound, ok}`` shape the kernel gates use):
+
+  * **overhead** -- the tracer's marginal cost as a fraction of untraced
+    serving time.  The pinned number is a *decomposition*: the per-span /
+    per-request hot-path costs are microbenchmarked on the real tracer
+    code (tight loops, best-of minima -- stable to a few percent), scaled
+    by the span counts the workload actually emits, doubled to cover the
+    engine-side call-site bookkeeping, and divided by the measured
+    untraced drain time.  A direct A/B wall-clock ratio is *also* recorded
+    (``ab_overhead_*``) but not pinned: on shared runners two back-to-back
+    40 ms drains jitter by +-5-10%, far above the ~1% effect under test,
+    so pinning the A/B number would gate merges on scheduler luck.
+  * **attribution exactness** -- a traced request's critical-path fractions
+    (queue/compute/wire/transcode) sum to 1 within 1e-6: spans tile the
+    request's life contiguously, by construction.
+  * **service-time pin** -- observed per-stage exec medians on a churn-free
+    run sit within 5% of the plan's ``core.bottleneck.service_times``
+    prediction, and the observed bottleneck resource is the plan's.
+  * **journal recovery record** -- a mid-stream node kill leaves a
+    ``kind="recovery"`` record in the control-plane journal whose
+    affected-stage set matches ``Dispatcher.last_recovery``.
+  * **export validity + determinism** -- the Chrome trace export is
+    structurally valid (ph/ts/pid/tid on every event, per-request tracks
+    non-overlapping) and a same-seed rerun is byte-identical.
+
+The node-kill run's Chrome trace is also written next to the artifact
+(``results/BENCH_observability.trace.json``) as a loadable sample.
+
+  PYTHONPATH=src python -m benchmarks.observability [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import statistics
+import time
+
+import jax.numpy as jnp
+
+from repro.api import ClusterSpec, DeploymentSpec, TraceConfig, deploy
+from repro.cluster import NodeFailed
+from repro.core.model_zoo import demo_mlp
+from repro.obs import analyze_spans
+from repro.obs.critical_path import pin_service_times, predicted_times
+
+from benchmarks.common import RESULTS_DIR, save, table
+
+ARTIFACT = "observability"  # results/BENCH_observability.json
+
+D = 32
+
+# wall-clock noise floor on the measured pieces (untraced drain minimum,
+# microbench minima); the bounds below carry this much *additive* slack
+# (documented, not hidden)
+_TIMING_SLACK = 0.01
+
+# the decomposition doubles the microbenched per-span cost to cover the
+# engine-side call sites (_trace_open/_trace_close dispatch, link-window
+# tiling) that the tight loop does not exercise
+_CALLSITE_FACTOR = 2.0
+
+OVERHEAD_FULL_BOUND = 0.03    # sample=1.0: <= 3% serving overhead
+OVERHEAD_SPARSE_BOUND = 0.005  # sample=0.01: <= 0.5%
+
+
+def _deploy(sample: float | None, *, model="demo_mlp", seed: int = 0,
+            n_nodes: int = 8):
+    if model == "demo_mlp":
+        graph, executor_for_version = demo_mlp(d=D)
+    else:  # timing-only zoo model (pass-through executor, real flops)
+        from repro.core.model_zoo import PAPER_MODELS
+
+        graph, executor_for_version = PAPER_MODELS[model](), None
+    return deploy(DeploymentSpec(
+        model=graph,
+        executor_for_version=executor_for_version,
+        cluster=ClusterSpec(n_nodes=n_nodes,
+                            capacity_bytes=graph.total_param_bytes / 2.5,
+                            seed=seed + 3),
+        seed=seed,
+        trace=None if sample is None else TraceConfig(sample=sample),
+    ))
+
+
+def _serve_once(sample: float | None, requests: int) -> tuple[float, object]:
+    """One fresh deployment served to empty; returns (drain wall s, dep)."""
+    d = _deploy(sample)
+    x = jnp.ones((D,)) * 0.1
+    for _ in range(requests):
+        d.submit(x)
+    t0 = time.perf_counter()
+    d.drain()
+    return time.perf_counter() - t0, d
+
+
+class _BenchReq:
+    """Minimal request stand-in for the tracer microbench (same attribute
+    shape the fan-out path reads)."""
+
+    __slots__ = ("req_id", "replica", "tenant", "attempts")
+
+    def __init__(self, i: int):
+        self.req_id = i
+        self.replica = 0
+        self.tenant = None
+        self.attempts = 0
+
+
+def _hot_path_costs(inner: int = 5000, reps: int = 5) -> dict:
+    """Best-of minima of the tracer hot-path primitives, in seconds."""
+    from repro.obs.trace import SpanTracer
+
+    batch = [_BenchReq(i) for i in range(4)]
+    span_cost = sample_cost = queue_cost = float("inf")
+    for _ in range(reps):
+        tr = SpanTracer(TraceConfig())
+        t0 = time.perf_counter()
+        for i in range(inner):
+            tr.record_many(batch, "exec", float(i), i + 0.5,
+                           stage=1, generation=0)
+        span_cost = min(span_cost,
+                        (time.perf_counter() - t0) / (inner * len(batch)))
+        tr2 = SpanTracer(TraceConfig(sample=0.01))
+        t0 = time.perf_counter()
+        for i in range(4 * inner):
+            tr2.sampled(i)
+        sample_cost = min(sample_cost,
+                          (time.perf_counter() - t0) / (4 * inner))
+        tr3 = SpanTracer(TraceConfig())
+        t0 = time.perf_counter()
+        for i in range(inner):
+            tr3.queue_open(i, float(i))
+            tr3.queue_since.pop(i)
+        queue_cost = min(queue_cost, (time.perf_counter() - t0) / inner)
+    return {"span_s": span_cost, "sample_s": sample_cost,
+            "queue_s": queue_cost}
+
+
+def _overhead(requests: int, reps: int) -> dict:
+    """Tracer cost share of one serving run (see module docstring).
+
+    Pinned: the decomposed estimate (microbenched per-span/per-request
+    costs x the workload's real span counts / untraced drain minimum).
+    Context only: the direct A/B medians, order-rotated per rep.
+    """
+    _serve_once(None, requests)  # warm the jax dispatch caches
+    _serve_once(1.0, requests)
+    configs = [("off", None), ("full", 1.0), ("sparse", 0.01)]
+    times = {"off": [], "sparse": [], "full": []}
+    spans = {"full": 0, "sparse": 0}
+    ratios = {"sparse": [], "full": []}
+    for rep in range(reps):
+        # rotate the in-rep order so monotone machine drift biases every
+        # config equally across reps instead of always taxing the last one
+        order = configs[rep % 3:] + configs[:rep % 3]
+        t = {}
+        gc.collect()
+        gc.disable()
+        try:
+            for key, sample in order:
+                t[key], dep = _serve_once(sample, requests)
+                if key in spans:
+                    spans[key] = len(dep.tracer.spans)
+        finally:
+            gc.enable()
+        for key in times:
+            times[key].append(t[key])
+        ratios["full"].append(t["full"] / t["off"])
+        ratios["sparse"].append(t["sparse"] / t["off"])
+    costs = _hot_path_costs()
+    off_s = min(times["off"])
+    # every submitted request pays one sampling decision + the admission
+    # queue bookkeeping; every emitted span pays the record fan-out, with
+    # the call-site factor covering the engine-side transition code
+    per_req = costs["sample_s"] + costs["queue_s"]
+    estimate = {
+        key: (spans[key] * costs["span_s"] * _CALLSITE_FACTOR
+              + requests * per_req) / off_s
+        for key in spans
+    }
+    med = statistics.median
+    return {
+        "off_s": off_s,
+        "sparse_s": min(times["sparse"]),
+        "full_s": min(times["full"]),
+        "spans_full": spans["full"],
+        "spans_sparse": spans["sparse"],
+        "span_cost_ns": costs["span_s"] * 1e9,
+        "sample_cost_ns": costs["sample_s"] * 1e9,
+        "queue_cost_ns": costs["queue_s"] * 1e9,
+        "overhead_full": estimate["full"],
+        "overhead_sparse": estimate["sparse"],
+        "ab_overhead_full": med(ratios["full"]) - 1.0,
+        "ab_overhead_sparse": med(ratios["sparse"]) - 1.0,
+    }
+
+
+def _chrome_valid(trace: dict) -> bool:
+    """Structural validity: required fields on every event, X events with
+    non-negative durations, per-(pid, tid) tracks non-overlapping."""
+    tracks: dict[tuple, list[tuple[float, float]]] = {}
+    for ev in trace["traceEvents"]:
+        if not all(k in ev for k in ("ph", "pid", "tid")):
+            return False
+        if ev["ph"] == "M":
+            continue
+        if ev["ph"] != "X" or "ts" not in ev or "dur" not in ev:
+            return False
+        if ev["dur"] < 0:
+            return False
+        tracks.setdefault((ev["pid"], ev["tid"]), []).append(
+            (ev["ts"], ev["dur"]))
+    for spans in tracks.values():
+        spans.sort()
+        for (t0, d0), (t1, _) in zip(spans, spans[1:]):
+            if t1 < t0 + d0 - 1e-6:  # overlap beyond float slop (us)
+                return False
+    return True
+
+
+def run(requests: int = 192, reps: int = 6,
+        timing_slack: float = _TIMING_SLACK) -> dict:
+    rows = []
+
+    def pin(check: str, value: float, bound: float) -> None:
+        rows.append({"check": check, "value": float(value),
+                     "bound": float(bound), "ok": bool(value <= bound)})
+
+    # --- tracer overhead ----------------------------------------------------
+    ov = _overhead(requests, reps)
+    pin("overhead_at_sample_1.0", ov["overhead_full"],
+        OVERHEAD_FULL_BOUND + timing_slack)
+    pin("overhead_at_sample_0.01", ov["overhead_sparse"],
+        OVERHEAD_SPARSE_BOUND + timing_slack)
+
+    # --- attribution exactness (spans tile each request's life) -------------
+    _, d = _serve_once(1.0, requests=24)
+    att = analyze_spans(d.tracer.spans)
+    pin("fraction_sum_abs_err",
+        abs(sum(att["fractions"][g] for g in att["fractions"]) - 1.0), 1e-6)
+    worst = 0.0
+    for req in d.loop.completed:
+        spans = d.tracer.spans_for(req.req_id)
+        worst = max(worst, abs(sum(s.duration_s for s in spans)
+                               - req.latency_s))
+    pin("span_coverage_vs_latency_abs_err_s", worst, 1e-9)
+
+    # --- per-stage service times vs. the plan (churn-free, real flops) ------
+    ds = _deploy(1.0, model="mobilenetv2", seed=1)
+    x = jnp.ones((8, 8)) * 0.1
+    for _ in range(12):
+        ds.submit(x)
+    ds.drain()
+    analysis = analyze_spans(ds.tracer.spans)
+    times = predicted_times(ds.control)
+    pin_report = pin_service_times(analysis, *times, rel_tol=0.05)
+    pin("stage_service_max_rel_err", pin_report["max_rel_err"],
+        pin_report["rel_tol"])
+    pin("bottleneck_agrees_with_plan",
+        0.0 if pin_report["bottleneck_agrees"] else 1.0, 0.0)
+
+    # --- node-kill journal + exported sample trace --------------------------
+    dk = _deploy(1.0, seed=2)
+    xk = jnp.ones((D,)) * 0.1
+    for _ in range(32):
+        dk.submit(xk)
+    killed = False
+    while dk.loop.backlog or dk.pending:
+        if not killed and len(dk.loop.completed) >= 16:
+            dk.inject(NodeFailed(dk.control.pipeline.pods[1].node_id))
+            killed = True
+        if not dk.step() and not dk.pending and not dk.loop.backlog:
+            break
+    recoveries = dk.journal.select(kind="recovery")
+    last = dk.control.dispatcher.last_recovery
+    journal_ok = bool(
+        recoveries and last is not None
+        and recoveries[-1].detail["affected_stages"]
+        == list(last["affected_stages"])
+        and recoveries[-1].detail["scoped"] == last["scoped"])
+    pin("journal_recovery_matches_dispatcher",
+        0.0 if journal_ok else 1.0, 0.0)
+
+    chrome = dk.chrome_trace()
+    pin("chrome_trace_valid", 0.0 if _chrome_valid(chrome) else 1.0, 0.0)
+    trace_path = RESULTS_DIR / "BENCH_observability.trace.json"
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    trace_path.write_text(json.dumps(chrome))
+
+    # --- same-seed determinism (byte-identical timelines) -------------------
+    _, d1 = _serve_once(1.0, requests=16)
+    _, d2 = _serve_once(1.0, requests=16)
+    identical = (json.dumps(d1.trace_timeline())
+                 == json.dumps(d2.trace_timeline()))
+    pin("same_seed_trace_identical", 0.0 if identical else 1.0, 0.0)
+
+    payload = {
+        "rows": rows,
+        "requests": requests,
+        "reps": reps,
+        "timing_slack": timing_slack,
+        "callsite_factor": _CALLSITE_FACTOR,
+        "drain_off_ms": ov["off_s"] * 1e3,
+        "drain_sparse_ms": ov["sparse_s"] * 1e3,
+        "drain_full_ms": ov["full_s"] * 1e3,
+        "spans_full": ov["spans_full"],
+        "spans_sparse": ov["spans_sparse"],
+        "span_cost_ns": ov["span_cost_ns"],
+        "sample_cost_ns": ov["sample_cost_ns"],
+        "queue_cost_ns": ov["queue_cost_ns"],
+        "ab_overhead_full": ov["ab_overhead_full"],
+        "ab_overhead_sparse": ov["ab_overhead_sparse"],
+        "fractions": att["fractions"],
+        "observed_bottleneck": analysis["bottleneck"],
+        "predicted_bottleneck": pin_report["predicted_bottleneck"],
+        "journal_records": len(dk.journal),
+        "journal_kinds": dk.journal.summary()["kinds"],
+        "chrome_events": len(chrome["traceEvents"]),
+    }
+    save(ARTIFACT, payload)
+    print(table(rows, ["check", "value", "bound", "ok"],
+                "Observability plane"))
+    print(f"sample Chrome trace: {trace_path}")
+    bad = [r["check"] for r in rows if not r["ok"]]
+    if bad:
+        raise RuntimeError(f"observability pins violated: {bad}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="fewer requests/reps")
+    args = ap.parse_args()
+    run(requests=64 if args.smoke else 192, reps=3 if args.smoke else 6)

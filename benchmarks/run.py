@@ -35,6 +35,7 @@ def bench_registry(fast: bool = False) -> dict:
         kernel_path,
         latency_pareto,
         multi_tenant,
+        observability,
         replica_scaling,
         throughput_scaling,
     )
@@ -65,6 +66,10 @@ def bench_registry(fast: bool = False) -> dict:
         "multi_tenant": (multi_tenant,
                          lambda: multi_tenant.run(
                              requests=24 if fast else 48)),
+        "observability": (observability,
+                          lambda: observability.run(
+                              requests=64 if fast else 192,
+                              reps=3 if fast else 6)),
     }
 
 

@@ -47,6 +47,7 @@ _LAZY = {
     "SLOClass": "repro.api.spec",
     "SpecIssue": "repro.api.spec",
     "TenantSpec": "repro.api.spec",
+    "TraceConfig": "repro.obs.trace",
     "as_tenants": "repro.api.spec",
     "validate_tenants": "repro.api.spec",
     "Plan": "repro.api.planner",

@@ -38,6 +38,7 @@ from repro.cluster.lifecycle import EdgeCluster
 from repro.cluster.serving import Request, ServingLoop
 from repro.cluster.store import ArtifactStore
 from repro.cluster.watch import ModelWatcher
+from repro.obs import Journal, MetricsRegistry, SpanTracer, analyze_spans
 
 
 def _passthrough_executor(start: int, stop: int, x):
@@ -105,6 +106,8 @@ def _build_deployment(
     flops_per_s: float,
     nodes=None,
     seed_offset: int = 0,
+    journal: Journal | None = None,
+    source_prefix: str = "",
 ) -> "Deployment":
     """Bootstrap one deployment's control + serving stack on ``cluster``.
 
@@ -113,13 +116,18 @@ def _build_deployment(
     ``subcluster`` view and every control plane is masked to it, so the
     deployment can never place -- or be perturbed -- outside its slice.
     ``seed_offset`` keeps per-tenant probe-noise streams distinct.
+    ``journal``/``source_prefix`` let the tenancy layer share ONE
+    control-plane journal across tenants (records keyed ``<tenant>/...``).
     """
     comm = cluster.comm
+    if journal is None:
+        journal = Journal()
     if spec.autoscale is not None:
         return _deploy_autoscaled(
             spec, graph, executor_for_version, cluster, store, positions,
             version=version, flops_per_s=flops_per_s,
             nodes=nodes, seed_offset=seed_offset,
+            journal=journal, source_prefix=source_prefix,
         )
     view = comm if nodes is None else subcluster(comm, nodes, keep=(0,))
     rplan = None
@@ -151,9 +159,10 @@ def _build_deployment(
             allowed_nodes=None if nodes is None else set(nodes) | {0},
             hosting_nodes=None if nodes is None else set(nodes),
             execution=spec.execution(),
+            journal=journal, journal_source=source_prefix + "control",
         )
         control.bootstrap(version)
-        dep = Deployment(spec, control, positions=positions)
+        dep = Deployment(spec, control, positions=positions, journal=journal)
     else:
         controls = []
         for r, group in enumerate(rplan.groups):
@@ -168,14 +177,17 @@ def _build_deployment(
                 allowed_nodes=set(group) | {0},
                 hosting_nodes=set(group),
                 execution=spec.execution(),
+                journal=journal,
+                journal_source=f"{source_prefix}replica:{r}",
             )
             control.bootstrap(version)
             controls.append(control)
         replicaset = ReplicaSet(
             cluster, controls, [set(g) for g in rplan.groups],
-            dispatcher_node=0,
+            dispatcher_node=0, journal=journal,
         )
-        dep = Deployment(spec, replicaset=replicaset, positions=positions)
+        dep = Deployment(spec, replicaset=replicaset, positions=positions,
+                         journal=journal)
     dep._check_slos()
     return dep
 
@@ -192,6 +204,8 @@ def _deploy_autoscaled(
     flops_per_s: float,
     nodes=None,
     seed_offset: int = 0,
+    journal: Journal | None = None,
+    source_prefix: str = "",
 ) -> "Deployment":
     """Autoscaling path: plan the widest feasible replica split, activate
     ``min_replicas`` groups, park the rest as the autoscaler's standby pool."""
@@ -228,6 +242,8 @@ def _deploy_autoscaled(
             allowed_nodes=set(group) | {0},
             hosting_nodes=set(group),
             execution=spec.execution(),
+            journal=journal,
+            journal_source=f"{source_prefix}replica:{r}",
         )
         control.bootstrap(max(version, store.current_version()))
         return control
@@ -237,8 +253,10 @@ def _deploy_autoscaled(
     controls = [make_control(g, r) for r, g in enumerate(active)]
     replicaset = ReplicaSet(
         cluster, controls, [set(g) for g in active], dispatcher_node=0,
+        journal=journal,
     )
-    dep = Deployment(spec, replicaset=replicaset, positions=positions)
+    dep = Deployment(spec, replicaset=replicaset, positions=positions,
+                     journal=journal)
     max_replicas = (
         None if auto.max_replicas == "auto" else int(auto.max_replicas))
     dep.autoscaler = Autoscaler(
@@ -247,6 +265,7 @@ def _deploy_autoscaled(
         backlog_high=auto.backlog_high, backlog_low=auto.backlog_low,
         target_p99_s=auto.target_p99_s, cooldown_s=auto.cooldown_s,
         window=auto.window,
+        name=source_prefix.rstrip("/") or None, journal=journal,
     )
     dep.loop.autoscaler = dep.autoscaler
     dep._check_slos()
@@ -267,12 +286,17 @@ class Deployment:
         *,
         replicaset: ReplicaSet | None = None,
         positions: np.ndarray | None = None,
+        journal: Journal | None = None,
     ):
         if (control is None) == (replicaset is None):
             raise ValueError("give exactly one of control= or replicaset=")
         self.spec = spec
         self.replicaset = replicaset
         self.autoscaler = None  # set by deploy() when spec.autoscale is given
+        self.journal = journal if journal is not None else Journal()
+        self.tracer = (
+            SpanTracer(spec.trace) if spec.trace is not None else None)
+        self.registry = MetricsRegistry()
         if replicaset is not None:
             # replica 0 as the representative for shared resources
             # (cluster/store are one object across every replica)
@@ -284,11 +308,15 @@ class Deployment:
                 admission_depth=spec.admission_depth,
                 class_priority=spec.class_priority(),
                 class_targets=spec.class_targets(),
+                tracer=self.tracer, registry=self.registry,
             )
         else:
             self.control = control
             if spec.serving == "sync":
-                self.loop = ServingLoop(control, microbatch=spec.microbatch)
+                self.loop = ServingLoop(
+                    control, microbatch=spec.microbatch,
+                    tracer=self.tracer, registry=self.registry,
+                )
             else:
                 self.loop = PipelinedServingLoop(
                     control, microbatch=spec.microbatch,
@@ -297,7 +325,10 @@ class Deployment:
                     admission_depth=spec.admission_depth,
                     class_priority=spec.class_priority(),
                     class_targets=spec.class_targets(),
+                    tracer=self.tracer, registry=self.registry,
                 )
+        # journal records are stamped off the serving clock from here on
+        self.journal.bind_clock(lambda: self.loop.clock_s)
         self.watcher = ModelWatcher(self.control.store)
         self.positions = positions  # node positions for random clusters (growth)
 
@@ -507,10 +538,13 @@ class Deployment:
             "predicted_throughput": plan.predicted_throughput if plan else None,
             "reconcile_actions": [a.kind for a in self.control.history],
             "serving": self.loop.metrics(),
+            "recovery": {
+                "last": self.control.dispatcher.last_recovery,
+                "log": list(self.control.dispatcher.recovery_log),
+            },
+            "journal": self.journal.summary(),
         }
-        from repro.cluster.serving import normalize_metrics
-
-        return normalize_metrics(out)
+        return self._finalize_metrics(out)
 
     def _replicated_metrics(self) -> dict:
         rset = self.replicaset
@@ -537,10 +571,12 @@ class Deployment:
                     if control.last_plan else []
                 ),
                 "reconcile_actions": [a.kind for a in control.history],
+                "recovery": {
+                    "last": control.dispatcher.last_recovery,
+                    "log": list(control.dispatcher.recovery_log),
+                },
             })
-        from repro.cluster.serving import normalize_metrics
-
-        return normalize_metrics({
+        return self._finalize_metrics({
             "version": plan.version,
             "n_nodes": self.cluster.n,
             "n_replicas": rset.n_replicas,
@@ -550,7 +586,39 @@ class Deployment:
             "predicted_throughput": plan.predicted_throughput,
             "replicas": replicas,
             "serving": self.loop.metrics(),
+            "journal": self.journal.summary(),
         })
+
+    def _finalize_metrics(self, out: dict) -> dict:
+        """Mirror the payload into the metrics registry, then attach the
+        registry snapshot + trace digest (additive keys: everything the
+        payload held before observability landed is untouched)."""
+        self.registry.ingest("deployment", out)
+        out["observability"] = {
+            "metrics": self.registry.snapshot(),
+            "trace": (self.tracer.summary()
+                      if self.tracer is not None else None),
+        }
+        from repro.cluster.serving import normalize_metrics
+
+        return normalize_metrics(out)
+
+    # -- observability --------------------------------------------------------
+    def trace_timeline(self) -> list[dict]:
+        """The span timeline as flat JSON dicts ([] when tracing is off)."""
+        return self.tracer.timeline() if self.tracer is not None else []
+
+    def chrome_trace(self) -> dict | None:
+        """Chrome trace-event export (None when tracing is off)."""
+        return (self.tracer.chrome_trace()
+                if self.tracer is not None else None)
+
+    def attribution(self) -> dict | None:
+        """Critical-path attribution over every recorded span (None when
+        tracing is off); see ``repro.obs.analyze_spans``."""
+        if self.tracer is None:
+            return None
+        return analyze_spans(self.tracer.spans)
 
     def _check_slos(self) -> None:
         """SLOs re-checked on the as-deployed plan (probed bandwidths)."""

@@ -18,6 +18,7 @@ from typing import Any, Callable
 from repro.api.registry import UnknownStrategyError, get_strategy
 from repro.core.graph import LayerGraph
 from repro.core.placement import CommGraph
+from repro.obs.trace import TraceConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -332,6 +333,13 @@ class DeploymentSpec:
         load-driven replica scaling (``AutoscaleSpec``): grow/retire
         replicas from observed backlog + p99 drift.  Mutually exclusive
         with an explicit ``replicas`` count (the autoscaler owns R).
+    trace:
+        per-request span tracing (``repro.obs.TraceConfig``): every sampled
+        request carries a span timeline (queue / exec / encode / wire /
+        decode) on the virtual clock, exposed via ``Deployment.tracer`` and
+        the critical-path analyzer.  ``True`` is shorthand for the default
+        config (sample=1.0); ``None`` (default) disables tracing with zero
+        serving-path overhead.
     use_pallas / interpret:
         the execution knob (``repro.core.execution.ExecutionKnob``):
         ``use_pallas=True`` runs the Pallas kernels inside the executable
@@ -365,6 +373,7 @@ class DeploymentSpec:
     slo_classes: tuple[SLOClass, ...] | None = None
     arrival: ArrivalSpec | None = None
     autoscale: AutoscaleSpec | None = None
+    trace: TraceConfig | None = None
     use_pallas: bool = False
     interpret: bool = False
 
@@ -375,6 +384,8 @@ class DeploymentSpec:
             object.__setattr__(self, "slo_classes", tuple(self.slo_classes))
         if self.autoscale is True:  # shorthand: default policy
             object.__setattr__(self, "autoscale", AutoscaleSpec())
+        if self.trace is True:  # shorthand: trace everything
+            object.__setattr__(self, "trace", TraceConfig())
 
     # -- SLO-class views ------------------------------------------------------
     def class_priority(self) -> dict[str, int]:
@@ -564,6 +575,17 @@ class DeploymentSpec:
                     f"the autoscaler owns the replica count (set "
                     f"min_replicas/max_replicas on the AutoscaleSpec)",
                 ))
+
+        if self.trace is not None:
+            if not isinstance(self.trace, TraceConfig):
+                issues.append(SpecIssue(
+                    "bad_trace",
+                    f"trace must be a TraceConfig (or True), "
+                    f"got {type(self.trace).__name__}",
+                ))
+            else:
+                issues.extend(SpecIssue("bad_trace", msg)
+                              for msg in self.trace.issues())
 
         if not (
             self.replicas == "auto"

@@ -32,16 +32,26 @@ import dataclasses
 import math
 from typing import Callable, Sequence
 
+from repro.obs.stats import percentile
+
 
 @dataclasses.dataclass(frozen=True)
 class ScaleEvent:
-    """One autoscaling decision, on the virtual clock."""
+    """One autoscaling decision, on the virtual clock.
+
+    ``measurement`` is the observed value that crossed the threshold named
+    in ``reason`` (backlog-per-replica, or the recent-window p99 in
+    seconds), so dashboards can plot the trigger alongside the decision
+    without parsing the reason string.  ``None`` for restore events, where
+    the trigger is total replica loss, not a measurement.
+    """
 
     t_s: float
     action: str  # "grow" | "retire" | "restore"
     replica: int
     reason: str
     live_after: int
+    measurement: float | None = None
 
     def summary(self) -> dict:
         return dataclasses.asdict(self)
@@ -74,6 +84,10 @@ class Autoscaler:
         optional label (the owning tenant under multi-tenant serving) --
         each tenant's autoscaler scales only that tenant's standby budget,
         and the label keys its events in cluster-wide metrics.
+    journal:
+        optional ``repro.obs.Journal``: every ``ScaleEvent`` is also
+        appended there as a ``kind="scale"`` record, so scaling decisions
+        interleave with reconciles/recoveries/rollouts on one timeline.
     """
 
     def __init__(
@@ -89,9 +103,11 @@ class Autoscaler:
         cooldown_s: float = 0.5,
         window: int = 32,
         name: str | None = None,
+        journal=None,
     ):
         self.make_control = make_control
         self.name = name
+        self.journal = journal
         self.standby: list[tuple[int, ...]] = [
             tuple(sorted(g)) for g in standby_groups]
         self.min_replicas = int(min_replicas)
@@ -113,8 +129,7 @@ class Autoscaler:
         if len(done) < 8:
             return None
         lats = sorted(r.latency_s for r in done[-self.window:])
-        rank = max(1, math.ceil(0.99 * len(lats)))
-        return float(lats[rank - 1])
+        return float(percentile(lats, 0.99))
 
     def observe(self, router) -> None:
         """One policy tick: called by the router between serving events."""
@@ -127,16 +142,19 @@ class Autoscaler:
         per_replica = router.backlog / len(live)
         p99 = self.recent_p99(router)
         reason = None
+        measurement = None
         if per_replica > self.backlog_high:
             reason = (f"backlog/replica {per_replica:.1f} > "
                       f"{self.backlog_high:g}")
+            measurement = per_replica
         elif (self.target_p99_s is not None and p99 is not None
               and p99 > self.target_p99_s):
             reason = f"recent p99 {p99:.3g}s > target {self.target_p99_s:g}s"
+            measurement = p99
         if reason is not None:
             cap = self.max_replicas
             if cap is None or len(live) < cap:
-                self._grow(router, reason)
+                self._grow(router, reason, measurement=measurement)
             return
         if (
             per_replica < self.backlog_low
@@ -147,7 +165,8 @@ class Autoscaler:
         ):
             self._shrink(
                 router,
-                f"backlog/replica {per_replica:.1f} < {self.backlog_low:g}")
+                f"backlog/replica {per_replica:.1f} < {self.backlog_low:g}",
+                measurement=per_replica)
 
     def restore(self, router) -> bool:
         """Last-live-replica-retired path: grow unconditionally (no
@@ -156,7 +175,16 @@ class Autoscaler:
         return self._grow(router, "no live replicas", action="restore")
 
     # -- actions -------------------------------------------------------------
-    def _grow(self, router, reason: str, action: str = "grow") -> bool:
+    def _record(self, event: ScaleEvent) -> None:
+        self.events.append(event)
+        if self.journal is not None:
+            source = "autoscaler" if self.name is None \
+                else f"{self.name}/autoscaler"
+            self.journal.append("scale", source, event.summary(),
+                                t_s=event.t_s)
+
+    def _grow(self, router, reason: str, action: str = "grow",
+              measurement: float | None = None) -> bool:
         while self.standby:
             group = self.standby.pop(0)
             try:
@@ -167,14 +195,16 @@ class Autoscaler:
                 continue
             r = router.add_replica(control, group)
             self._last_action_s = router.clock_s
-            self.events.append(ScaleEvent(
+            self._record(ScaleEvent(
                 router.clock_s, action, r, reason,
                 len(router.replicaset.live_indices()),
+                measurement=measurement,
             ))
             return True
         return False
 
-    def _shrink(self, router, reason: str) -> None:
+    def _shrink(self, router, reason: str,
+                measurement: float | None = None) -> None:
         rset = router.replicaset
         live = rset.live_indices()
         r = rset._weakest(live)
@@ -182,9 +212,10 @@ class Autoscaler:
         router._reclaim(r)  # resident requests re-route to the survivors
         self.standby.append(tuple(sorted(rset.groups[r])))
         self._last_action_s = router.clock_s
-        self.events.append(ScaleEvent(
+        self._record(ScaleEvent(
             router.clock_s, "retire", r, reason,
             len(rset.live_indices()),
+            measurement=measurement,
         ))
 
     # -- reporting -----------------------------------------------------------

@@ -116,6 +116,8 @@ class ControlPlane:
         scoped_recovery: bool = True,
         recovery_width: int | None = None,
         execution=None,
+        journal=None,
+        journal_source: str = "control",
     ):
         self.cluster = cluster
         self.store = store
@@ -139,6 +141,10 @@ class ControlPlane:
         self.generation = 0
         self._events: deque[ClusterEvent] = deque()
         self.history: list[ReconcileAction] = []
+        # shared control-plane journal (obs.journal.Journal); every non-noop
+        # decision ALSO lands there, tagged with this plane's source name
+        self.journal = journal
+        self.journal_source = str(journal_source)
 
     # -- bootstrap -----------------------------------------------------------
     def bootstrap(
@@ -219,6 +225,7 @@ class ControlPlane:
             None, "redeploy",
             f"replan with {dict(plan.strategies)}",
         ))
+        self._journal_action(self.history[-1])
         return plan
 
     # -- event intake --------------------------------------------------------
@@ -272,7 +279,20 @@ class ControlPlane:
             )
             self._replace()
         self.history.extend(actions)
+        for a in actions:
+            self._journal_action(a)
         return actions
+
+    def _journal_action(self, action: ReconcileAction) -> None:
+        """Record a non-noop reconcile decision on the shared journal."""
+        if self.journal is None or action.kind == "noop":
+            return
+        self.journal.append("reconcile", self.journal_source, {
+            "event": (type(action.event).__name__
+                      if action.event is not None else None),
+            "action": action.kind,
+            "detail": action.detail,
+        })
 
     def _handle(self, event: ClusterEvent) -> ReconcileAction:
         if isinstance(event, VersionBumped):
@@ -418,6 +438,12 @@ class ControlPlane:
             self.pipeline, self.desired.graph, self.desired.version,
             capacity=self.desired.capacity, scope_nodes=scope,
         )
+        if self.journal is not None and self.dispatcher.last_recovery:
+            # the scoped-recovery record (affected stages included) lands on
+            # the journal next to the reconcile action that triggered it
+            self.journal.append(
+                "recovery", self.journal_source,
+                dict(self.dispatcher.last_recovery))
 
     def _current_bottleneck(self) -> float:
         """Max link time of the deployed path on the TRUE bandwidths,
@@ -500,6 +526,7 @@ class ReplicaSet:
         groups: Sequence[Sequence[int]],
         *,
         dispatcher_node: int = 0,
+        journal=None,
     ):
         if len(controls) != len(groups):
             raise ValueError("one node group per control plane")
@@ -507,6 +534,7 @@ class ReplicaSet:
         self.controls = list(controls)
         self.groups = [set(g) for g in groups]
         self.dispatcher_node = dispatcher_node
+        self.journal = journal  # rollout/retire transitions land here
         self.retired = [False] * len(self.controls)
         self._rollout_queue: deque[VersionBumped] = deque()
         self._rollout_targets: deque[int] | None = None
@@ -670,8 +698,18 @@ class ReplicaSet:
             if self.retired[nxt]:
                 continue
             self.controls[nxt].submit(self._rollout_event)
+            if self.journal is not None:
+                self.journal.append("rollout", "replicaset", {
+                    "version": self._rollout_event.version,
+                    "replica": nxt, "phase": "submit",
+                })
             self._rollout_current = nxt
             return
+        if self.journal is not None and self._rollout_event is not None:
+            self.journal.append("rollout", "replicaset", {
+                "version": self._rollout_event.version,
+                "replica": None, "phase": "complete",
+            })
         self._rollout_event = None
         self._rollout_current = None
         self._rollout_targets = None
@@ -714,3 +752,7 @@ class ReplicaSet:
             None, "retire",
             reason or f"replica {r}'s group can no longer host the model",
         ))
+        if self.journal is not None:
+            self.journal.append("retire", "replicaset", {
+                "replica": r, "reason": control.history[-1].detail,
+            })

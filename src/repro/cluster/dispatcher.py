@@ -87,9 +87,12 @@ class Dispatcher:
         self._flops_key: int | None = None
         self._flops: list[float] | None = None
         # recovery bookkeeping: how the last replace_placement was solved
-        # ({"scoped": bool, "scope_size": int, "fallback": str}); None until
-        # the first recovery
+        # ({"scoped": bool, "scope_size": int, "fallback": str,
+        # "affected_stages": [int, ...]}); None until the first recovery.
+        # recovery_log accumulates every such record in order, so the full
+        # recovery history is auditable (metrics + journal surface it).
         self.last_recovery: dict | None = None
+        self.recovery_log: list[dict] = []
 
     def node_flops(self) -> list[float]:
         """Per-node compute rates, indexed by node id (0 = unmodelled).
@@ -280,8 +283,16 @@ class Dispatcher:
             out_bytes=graph.layers[-1].out_bytes,
             dispatcher=self.leader,
         )
+        # stages whose pod is dead or stranded on an unhealthy node -- the
+        # serving engines requeue exactly these; recorded so recovery
+        # records are comparable with the engine's requeue decisions
+        affected = sorted(
+            s for s, pod in enumerate(pipeline.pods)
+            if not pod.alive or not self.cluster.nodes[pod.node_id].healthy
+        )
         place = None
-        self.last_recovery = {"scoped": False, "scope_size": 0, "fallback": "none"}
+        self.last_recovery = {"scoped": False, "scope_size": 0,
+                              "fallback": "none", "affected_stages": affected}
         if scope_nodes is not None:
             place = self.planner.place(
                 pipeline.boundary_bytes, part_bytes,
@@ -291,7 +302,7 @@ class Dispatcher:
             if place.feasible:
                 self.last_recovery = {
                     "scoped": True, "scope_size": len(set(scope_nodes)),
-                    "fallback": "none",
+                    "fallback": "none", "affected_stages": affected,
                 }
             else:
                 place = None
@@ -303,6 +314,7 @@ class Dispatcher:
             )
         if not place.feasible:
             self.last_recovery["fallback"] = "reconfigure"
+            self.recovery_log.append(dict(self.last_recovery))
             # partitions no longer fit the surviving nodes: full reconfigure
             plan = self.configure(graph, version, capacity=capacity,
                                   compression_ratio=pipeline.compression_ratio)
@@ -346,6 +358,7 @@ class Dispatcher:
                 predicted_throughput=float(metrics.effective_throughput),
                 codecs=codecs,
             )
+        self.recovery_log.append(dict(self.last_recovery))
         return pipeline
 
 

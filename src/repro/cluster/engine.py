@@ -51,6 +51,7 @@ from repro.cluster.events import NodeFailed
 from repro.cluster.lifecycle import Pod
 from repro.cluster.serving import Request, latency_report, normalize_metrics
 from repro.core.bottleneck import service_times
+from repro.obs.trace import split_hop, split_window
 
 _ALL = "all"  # sentinel: every stage is affected (version bump, restart)
 
@@ -73,6 +74,10 @@ class Microbatch:
     stage: int  # next stage whose compute this batch still needs
     location: tuple
     ready_at: float = 0.0
+    # span tracing (populated only for sampled requests; empty = untraced)
+    traced: list = dataclasses.field(default_factory=list)
+    phase: tuple | None = None  # open span phase, e.g. ("exec", s)
+    phase_t0: float = 0.0
 
 
 @dataclasses.dataclass
@@ -113,6 +118,8 @@ class PipelinedServingLoop:
         admission_depth: int | None = None,
         class_priority: dict[str, int] | None = None,
         class_targets: dict[str, float | None] | None = None,
+        tracer=None,
+        registry=None,
     ):
         if queue_depth < 1:
             raise ValueError("queue_depth must be >= 1")
@@ -134,6 +141,10 @@ class PipelinedServingLoop:
             None if admission_depth is None else int(admission_depth))
         self.class_priority = dict(class_priority or {})
         self.class_targets = dict(class_targets or {})
+        # observability plane: both default None (zero overhead -- every
+        # tracing/counting site is behind an ``is not None`` guard)
+        self.tracer = tracer
+        self._registry = registry
         self.queue: deque[Request] = deque()  # admission queue
         self.completed: list[Request] = []
         self.failed: list[Request] = []
@@ -149,6 +160,7 @@ class PipelinedServingLoop:
         self._link_s: list[float] = []  # per-hop transfer time, len k+1
         self._links_busy: list[Microbatch | None] = []
         self._link_codecs: list = []  # Codec per hop (None = raw / no wire)
+        self._link_parts: list = []  # (encode_s, wire_s, decode_s) per hop
         self._link_raw: list[float] = []  # raw boundary bytes per hop
         self._link_wire: list[float] = []  # on-wire bytes per hop
         self._link_busy_s: list[float] = []  # time each link spent occupied
@@ -207,6 +219,9 @@ class PipelinedServingLoop:
         if (self.admission_depth is not None
                 and len(self.queue) >= self.admission_depth):
             self.rejected.append(req)
+            if self._registry is not None:
+                self._registry.counter(
+                    "requests_rejected", engine="pipelined").inc()
         else:
             self.queue.append(req)
 
@@ -386,6 +401,8 @@ class PipelinedServingLoop:
         actions = self.control.reconcile()
         if any(a.kind != "noop" for a in actions):
             self.clock_s += self.recovery_penalty_s
+            if self._registry is not None:
+                self._registry.counter("reconciles", engine="pipelined").inc()
         if self.control.pipeline is not pipe_before:
             # new pipeline object: version bump, full restart, or reconfigure
             # fallback -- partitions/weights may differ, nothing carries over
@@ -408,6 +425,14 @@ class PipelinedServingLoop:
         pipe = control.pipeline
         disp = control.dispatcher
         graph = control.desired.graph
+        if self.tracer is not None:
+            # close every traced batch's open span on the OLD hop/stage
+            # geometry (the decomposition tables are about to be rebuilt);
+            # re-seated batches reopen below, requeued ones restart from
+            # admission
+            for mb in self._inflight:
+                if mb.traced:
+                    self._trace_close(mb, self.clock_s)
         comm = disp.probed if disp.probed is not None else control.cluster.comm
         path = [p.node_id for p in pipe.pods]
         parts = [p.partition for p in pipe.pods]
@@ -441,6 +466,18 @@ class PipelinedServingLoop:
             self._link_wire.append(
                 codec.wire_bytes(raw) if codec is not None
                 else (raw if active else 0.0))
+        # analytic encode/wire/decode decomposition of each hop window, on
+        # the same codec cost model link_s itself was built from -- the
+        # tracer tiles observed link windows with these proportions
+        flops = [n.flops_per_s for n in control.cluster.nodes]
+        self._link_parts = [
+            split_hop(
+                link_s[h], self._link_codecs[h], self._link_raw[h],
+                src_flops=flops[ends[h][0]] if ends[h][0] is not None else 0.0,
+                dst_flops=flops[ends[h][1]] if ends[h][1] is not None else 0.0,
+            )
+            for h in range(k + 1)
+        ]
         old_stages = self._stages
         carry_stats = len(old_stages) == k and affected is not _ALL
         self._stages = []
@@ -486,13 +523,22 @@ class PipelinedServingLoop:
                 # a compute in progress restarts: mb.x is still the stage input
                 mb.location = ("queue", idx)
                 self._stages[idx].queue.append(mb)
+                if mb.traced:
+                    self._trace_open(mb, ("squeue", idx), self.clock_s)
             elif kind == "out":
                 self._stages[idx].out.append(mb)
+                if mb.traced:
+                    self._trace_open(mb, ("out", idx), self.clock_s)
             else:  # hop idx >= 1: retransmit from the source stage's out buffer
                 mb.location = ("out", idx - 1)
                 self._stages[idx - 1].out.append(mb)
+                if mb.traced:
+                    self._trace_open(mb, ("out", idx - 1), self.clock_s)
         # back to admission newest-first so it re-admits in original order
         self._requeues += len(requeue)
+        if requeue and self._registry is not None:
+            self._registry.counter(
+                "requeued_microbatches", engine="pipelined").inc(len(requeue))
         retried = {id(mb) for mb in requeue}
         for mb in sorted(requeue + readmit, key=lambda m: -m.mb_id):
             self._readmit(mb.requests, retry=id(mb) in retried)
@@ -518,6 +564,14 @@ class PipelinedServingLoop:
             (req, False)
             for _, _, req in sorted(self._arrivals)
         )
+        if self.tracer is not None:
+            # evacuated requests restart on another engine whose clock is
+            # unrelated to ours: drop their partial timelines here so the
+            # receiving engine re-attributes their whole life (lost work
+            # shows up as queueing there, never as overlapping spans)
+            self.tracer.restart_many(
+                {req.req_id for req, _ in out
+                 if self.tracer.sampled(req.req_id)})
         self._inflight.clear()
         self.queue.clear()
         self._arrivals.clear()
@@ -584,10 +638,15 @@ class PipelinedServingLoop:
                 mb.stage = idx + 1
                 mb.location = ("out", idx)
                 st.out.append(mb)
+                if mb.traced:
+                    self._trace_close(mb, self.clock_s)  # exec span
+                    self._trace_open(mb, ("out", idx), self.clock_s)
             else:  # transfer on hop idx finished
                 self._links_busy[idx] = None
                 self._link_busy_s[idx] += self._link_s[idx]
                 self._link_xfers[idx] += 1
+                if mb.traced:
+                    self._trace_close(mb, self.clock_s)  # encode/wire/decode
                 codec = self._link_codecs[idx] if idx < len(self._link_codecs) else None
                 if codec is not None:
                     executor = self.control.pipeline.executor
@@ -612,6 +671,8 @@ class PipelinedServingLoop:
                     st.reserved -= 1
                     st.queue.append(mb)
                     mb.location = ("queue", idx)
+                    if mb.traced:
+                        self._trace_open(mb, ("squeue", idx), self.clock_s)
         self._schedule()
         return True
 
@@ -636,6 +697,9 @@ class PipelinedServingLoop:
                     dst.reserved += 1
                     dst.max_queue = max(dst.max_queue, len(dst.queue) + dst.reserved)
                 mb = st.out.popleft()
+                if mb.traced:
+                    self._trace_close(mb, self.clock_s)  # out-buffer wait
+                    self._trace_open(mb, ("xfer", h), self.clock_s)
                 mb.location = ("link", h)
                 mb.ready_at = self.clock_s + self._link_s[h]
                 self._links_busy[h] = mb
@@ -645,6 +709,9 @@ class PipelinedServingLoop:
                 st = self._stages[s]
                 if st.current is None and not st.out and st.queue:
                     mb = st.queue.popleft()
+                    if mb.traced:
+                        self._trace_close(mb, self.clock_s)  # stage-queue wait
+                        self._trace_open(mb, ("exec", s), self.clock_s)
                     st.current = mb
                     mb.location = ("compute", s)
                     mb.ready_at = self.clock_s + st.compute_s
@@ -669,6 +736,17 @@ class PipelinedServingLoop:
                     stage=0, location=("link", 0),
                     ready_at=self.clock_s + self._link_s[0],
                 )
+                tr = self.tracer
+                if tr is not None:
+                    traced = [r for r in batch if tr.sampled(r.req_id)]
+                    if traced:
+                        mb.traced = traced
+                        for r in traced:
+                            # the admission-queue span runs from the last
+                            # (re-)entry into admission to now
+                            self._emit_span(
+                                r, "queue", tr.queue_take(r), self.clock_s)
+                        self._trace_open(mb, ("xfer", 0), self.clock_s)
                 self._next_mb += 1
                 self._links_busy[0] = mb
                 st0.reserved += 1
@@ -699,13 +777,21 @@ class PipelinedServingLoop:
         ``retry=True`` charges an attempt (the batch was resident on a
         failed resource) and moves exhausted requests to ``failed``;
         ``retry=False`` is a free retransmission (input hop)."""
+        tr = self.tracer
         for req in reversed(requests):
             if retry:
                 req.attempts += 1
                 if req.attempts >= self.max_attempts:
                     self.failed.append(req)
+                    if tr is not None:
+                        tr.forget(req.req_id)
+                    if self._registry is not None:
+                        self._registry.counter(
+                            "requests_failed", engine="pipelined").inc()
                     continue
             self.queue.appendleft(req)
+            if tr is not None and tr.sampled(req.req_id):
+                tr.queue_open(req.req_id, self.clock_s)
 
     def _requeue_stalled(self, stalled: list[Microbatch]) -> None:
         """Pull transfers off dead links and send their requests back to
@@ -713,6 +799,8 @@ class PipelinedServingLoop:
         stage compute is finite whenever its node models flops at all)."""
         self._requeues += len(stalled)
         for mb in sorted(stalled, key=lambda m: -m.mb_id):
+            if mb.traced:
+                self._trace_close(mb, self.clock_s)  # truncated dead-link ride
             h = mb.location[1]
             self._links_busy[h] = None
             if h < len(self._stages):  # hop h had reserved stage h's in-slot
@@ -723,10 +811,66 @@ class PipelinedServingLoop:
     def _complete(self, mb: Microbatch) -> None:
         self._inflight.remove(mb)
         self._mb_completed += 1
+        reg = self._registry
+        if reg is not None:
+            reg.counter("requests_completed", engine="pipelined").inc(
+                len(mb.requests))
+            reg.counter("microbatches_completed", engine="pipelined").inc()
         for i, req in enumerate(mb.requests):
             req.result = mb.x[i]
             req.completed_s = self.clock_s
             self.completed.append(req)
+            if reg is not None:
+                reg.histogram(
+                    "request_latency_s", engine="pipelined",
+                ).observe(req.latency_s)
+
+    # -- span tracing ----------------------------------------------------------
+    # A microbatch carries at most one OPEN phase (``mb.phase``): the
+    # engine-internal state it is currently occupying, tagged by location
+    # kind -- ("squeue", s) stage-input wait, ("exec", s) compute,
+    # ("out", s) out-buffer wait, ("xfer", h) riding hop h.  Every state
+    # transition closes the open phase (emitting one span per traced
+    # request -- link windows are tiled into encode/wire/decode via the
+    # per-hop analytic parts) and opens the next at the same clock tick,
+    # so a completed request's spans tile [submitted_s, completed_s)
+    # exactly.
+
+    def _trace_open(self, mb: Microbatch, phase: tuple, t: float) -> None:
+        mb.phase = phase
+        mb.phase_t0 = t
+
+    def _trace_close(self, mb: Microbatch, t1: float) -> None:
+        if mb.phase is None:
+            return
+        name, idx = mb.phase
+        t0 = mb.phase_t0
+        mb.phase = None
+        if t1 <= t0:
+            return
+        emit = self.tracer.record_many
+        gen = self.control.generation
+        if name == "xfer":
+            parts = (self._link_parts[idx] if idx < len(self._link_parts)
+                     else (0.0, t1 - t0, 0.0))
+            codec = (self._link_codecs[idx]
+                     if idx < len(self._link_codecs) else None)
+            cname = codec.name if codec is not None else None
+            for phase, a, b in split_window(t0, t1, parts):
+                emit(mb.traced, phase, a, b, hop=idx, codec=cname,
+                     generation=gen)
+        elif name == "exec":
+            emit(mb.traced, "exec", t0, t1, stage=idx, generation=gen)
+        else:  # "squeue" / "out": stage-attributed queueing
+            emit(mb.traced, "queue", t0, t1, stage=idx, generation=gen)
+
+    def _emit_span(self, req: Request, phase: str, t0: float, t1: float, *,
+                   stage: int | None = None, hop: int | None = None,
+                   codec: str | None = None) -> None:
+        self.tracer.record(
+            req.req_id, phase, t0, t1, stage, hop,
+            req.replica, req.tenant, codec,
+            self.control.generation, req.attempts)
 
 
 class ReplicatedServingLoop:
@@ -769,19 +913,25 @@ class ReplicatedServingLoop:
         admission_depth: int | None = None,
         class_priority: dict[str, int] | None = None,
         class_targets: dict[str, float | None] | None = None,
+        tracer=None,
+        registry=None,
     ):
         if replica_backlog < 1:
             raise ValueError("replica_backlog must be >= 1")
         if admission_depth is not None and admission_depth < 1:
             raise ValueError("admission_depth must be >= 1")
         self.replicaset = replicaset
+        self.tracer = tracer
+        self._registry = registry
         # the admission bound lives at the router (cluster-wide queue); the
-        # per-replica engines are bound by replica_backlog, never rejecting
+        # per-replica engines are bound by replica_backlog, never rejecting.
+        # tracer/registry ride along so autoscaler-grown replicas
+        # (add_replica) record into the same deployment-wide plane
         self._engine_kw = dict(
             microbatch=microbatch, queue_depth=queue_depth,
             max_attempts=max_attempts, recovery_penalty_s=recovery_penalty_s,
             max_batch=max_batch, class_priority=class_priority,
-            class_targets=class_targets,
+            class_targets=class_targets, tracer=tracer, registry=registry,
         )
         self.loops = [
             PipelinedServingLoop(control, **self._engine_kw)
@@ -884,6 +1034,9 @@ class ReplicatedServingLoop:
             return
         while len(self.queue) > self.admission_depth:
             self.rejected.append(self.queue.pop())
+            if self._registry is not None:
+                self._registry.counter(
+                    "requests_rejected", engine="router").inc()
 
     # -- one serving round -----------------------------------------------------
     def step(self) -> list[Request]:

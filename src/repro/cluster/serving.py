@@ -31,12 +31,15 @@ pipeline-parallel throughput model (and the source of its 200% claim).
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Any
 
 import jax.numpy as jnp
 
 from repro.cluster.controlplane import ControlPlane, ReconcileAction
+from repro.obs.stats import latency_report, latency_stats, percentile  # noqa: F401 -- re-exported; the single nearest-rank implementation lives in obs.stats
+from repro.obs.trace import split_hop, split_window
 
 
 @dataclasses.dataclass
@@ -80,57 +83,6 @@ class Request:
         return self.completed_s - self.submitted_s
 
 
-def percentile(sorted_vals, q: float) -> float:
-    """Nearest-rank percentile (q in [0, 1]) over pre-sorted values."""
-    if not sorted_vals:
-        return 0.0
-    import math
-
-    rank = max(1, math.ceil(q * len(sorted_vals)))
-    return float(sorted_vals[rank - 1])
-
-
-def latency_stats(requests) -> dict:
-    """p50/p95/p99 + mean/max admit-to-complete latency of completed requests."""
-    lats = sorted(r.latency_s for r in requests if r.done)
-    n = len(lats)
-    return {
-        "count": n,
-        "mean_s": sum(lats) / n if n else 0.0,
-        "p50_s": percentile(lats, 0.50),
-        "p95_s": percentile(lats, 0.95),
-        "p99_s": percentile(lats, 0.99),
-        "max_s": lats[-1] if n else 0.0,
-    }
-
-
-def latency_report(requests, class_targets: dict | None = None) -> dict:
-    """Latency percentiles overall and per SLO class.
-
-    ``class_targets`` maps class name -> target latency (seconds) or None;
-    classed entries gain ``target_s`` and ``attainment`` (fraction of the
-    class's completions within target).  Requests without a class report
-    under ``"default"``.
-    """
-    by_class: dict[str, list] = {}
-    for r in requests:
-        if r.done:
-            by_class.setdefault(r.slo_class or "default", []).append(r)
-    classes = {}
-    for name in sorted(by_class):
-        reqs = by_class[name]
-        entry = latency_stats(reqs)
-        target = (class_targets or {}).get(name)
-        entry["target_s"] = target
-        entry["attainment"] = (
-            sum(1 for r in reqs if r.latency_s <= target) / len(reqs)
-            if target is not None and reqs else None
-        )
-        classes[name] = entry
-    return {"overall": latency_stats(r for r in requests if r.done),
-            "classes": classes}
-
-
 def normalize_metrics(payload):
     """Canonical metrics payload: the JSON round-trip identity.
 
@@ -167,11 +119,15 @@ class ServingLoop:
         microbatch: int = 4,
         max_attempts: int = 5,
         recovery_penalty_s: float = 0.25,
+        tracer=None,
+        registry=None,
     ):
         self.control = control
         self.microbatch = int(microbatch)
         self.max_attempts = int(max_attempts)
         self.recovery_penalty_s = float(recovery_penalty_s)
+        self.tracer = tracer
+        self._registry = registry
         self.queue: deque[Request] = deque()
         self.completed: list[Request] = []
         self.failed: list[Request] = []
@@ -215,11 +171,20 @@ class ServingLoop:
             self._requeue(batch)
             self._reconcile()
             return []
+        t0_round = self.clock_s
         self.clock_s += self._round_e2e_s(trace)
+        if self.tracer is not None:
+            self._trace_round(batch, t0_round, self.clock_s)
         for i, req in enumerate(batch):
             req.result = ys[i]
             req.completed_s = self.clock_s
             self.completed.append(req)
+            if self._registry is not None:
+                self._registry.counter(
+                    "requests_completed", engine="sync").inc()
+                self._registry.histogram(
+                    "request_latency_s", engine="sync",
+                ).observe(req.latency_s)
         return batch
 
     def metrics(self) -> dict:
@@ -246,22 +211,21 @@ class ServingLoop:
             done.extend(self.step())
         return done
 
-    def _round_e2e_s(self, trace) -> float:
-        """End-to-end cost of one synchronous round, on the SAME timing
-        model as the pipelined engine (``core.bottleneck.service_times``:
-        probed bandwidths, dispatcher input/output hops included) -- so the
-        pipelined-vs-sync comparison isolates execution discipline, not a
-        timing-model delta.  Falls back to the pipeline's own trace when the
-        dispatcher has no probed view (direct lifecycle use)."""
+    def _round_times(self):
+        """Per-stage/per-hop service times for one synchronous round, on
+        the SAME timing model as the pipelined engine
+        (``core.bottleneck.service_times``: probed bandwidths, dispatcher
+        input/output hops included).  ``None`` when the dispatcher has no
+        probed view (direct lifecycle use)."""
         control = self.control
         disp = control.dispatcher
         pipe = control.pipeline
         if disp.probed is None or control.desired is None:
-            return trace.e2e_s
+            return None
         from repro.core.bottleneck import service_times
 
         graph = control.desired.graph
-        compute_s, link_s = service_times(
+        return service_times(
             [p.partition for p in pipe.pods],
             [p.node_id for p in pipe.pods],
             disp.probed.bw,
@@ -272,8 +236,76 @@ class ServingLoop:
             compression_ratio=pipe.compression_ratio,
             codecs=pipe.link_codecs,
         )
+
+    def _round_e2e_s(self, trace) -> float:
+        """End-to-end cost of one synchronous round -- the honest sum of
+        stage and link times (so the pipelined-vs-sync comparison isolates
+        execution discipline, not a timing-model delta).  Falls back to the
+        pipeline's own trace when no probed view exists."""
+        times = self._round_times()
+        if times is None:
+            return trace.e2e_s
+        compute_s, link_s = times
         finite = [s for s in compute_s + link_s if s != float("inf")]
         return sum(finite)
+
+    def _trace_round(self, batch: list[Request], t0: float, t1: float) -> None:
+        """Emit one synchronous round's spans for the sampled requests of
+        ``batch``: the admission-queue wait up to the round start, then the
+        sequential hop/stage walk the round actually paid for (link windows
+        tiled into encode/wire/decode via the codec cost model).  The walk
+        replays the same per-resource times ``_round_e2e_s`` summed, so the
+        spans tile ``[queue-entry, t1)``."""
+        tr = self.tracer
+        traced = [r for r in batch if tr.sampled(r.req_id)]
+        if not traced:
+            return
+        control = self.control
+        pipe = control.pipeline
+        gen = control.generation
+
+        def emit(req, phase, a, b, stage=None, hop=None, codec=None):
+            tr.record(req.req_id, phase, a, b, stage, hop,
+                      req.replica, req.tenant, codec, gen, req.attempts)
+
+        for req in traced:
+            emit(req, "queue", tr.queue_take(req), t0)
+        times = self._round_times()
+        if times is None or t1 <= t0:
+            for req in traced:  # no probed decomposition: one opaque window
+                emit(req, "exec", t0, t1)
+            return
+        compute_s, link_s = times
+        path = [p.node_id for p in pipe.pods]
+        k = len(path)
+        graph = control.desired.graph
+        hop_bytes = [graph.in_bytes, *pipe.boundary_bytes,
+                     graph.layers[-1].out_bytes]
+        ends = [(control.dispatcher.leader, path[0] if path else None)]
+        ends += [(path[i], path[i + 1]) for i in range(k - 1)]
+        ends += [(path[-1] if path else None, control.dispatcher.leader)]
+        flops = [n.flops_per_s for n in control.cluster.nodes]
+        cursor = t0
+        for h in range(k + 1):
+            if math.isfinite(link_s[h]) and link_s[h] > 0:
+                raw = float(hop_bytes[h]) / pipe.compression_ratio
+                a, b = ends[h]
+                active = raw > 0 and a is not None and b is not None and a != b
+                codec = pipe.hop_codec(h) if active else None
+                parts = split_hop(
+                    link_s[h], codec, raw,
+                    src_flops=flops[a] if a is not None else 0.0,
+                    dst_flops=flops[b] if b is not None else 0.0)
+                for phase, pa, pb in split_window(
+                        cursor, cursor + link_s[h], parts):
+                    for req in traced:
+                        emit(req, phase, pa, pb, hop=h,
+                             codec=codec.name if codec is not None else None)
+                cursor += link_s[h]
+            if h < k and math.isfinite(compute_s[h]):
+                for req in traced:
+                    emit(req, "exec", cursor, cursor + compute_s[h], stage=h)
+                cursor += compute_s[h]
 
     # -- recovery internals ----------------------------------------------------
     def _requeue(self, batch: list[Request]) -> None:

@@ -25,6 +25,7 @@ from repro.api import (
     AutoscaleSpec,
     ClusterSpec,
     DeploymentSpec,
+    TraceConfig,
     deploy,
     list_strategies,
 )
@@ -78,6 +79,8 @@ def serve_edge(
     model: str = "demo_mlp",
     use_pallas: bool = False,
     interpret: bool = False,
+    trace_sample: float | None = None,
+    trace_out: str | None = None,
 ) -> int:
     """Edge-cluster serving demo: deploy(spec) -> stream -> kill -> recover.
 
@@ -85,6 +88,10 @@ def serve_edge(
     (``repro.workload``) admitted by timestamp on the virtual clock, with a
     latency percentile report at the end.  ``autoscale`` turns on
     backlog-driven replica scaling over the planner's widest feasible split.
+    ``trace_sample`` enables per-request span tracing at that sampling rate
+    and prints the critical-path attribution; ``trace_out`` additionally
+    writes the Chrome trace-event export there (chrome://tracing /
+    ui.perfetto.dev).
     """
     graph, executor_for_version, x0 = _zoo(
         model, width, use_pallas=use_pallas, interpret=interpret)
@@ -112,6 +119,8 @@ def serve_edge(
         admission_depth=admission_depth,
         arrival=arrival,
         autoscale=AutoscaleSpec() if autoscale else None,
+        trace=(TraceConfig(sample=trace_sample)
+               if trace_sample is not None else None),
         use_pallas=use_pallas,
         interpret=interpret,
     )
@@ -192,6 +201,23 @@ def serve_edge(
         for e in a["events"]:
             print(f"  t={e['t_s']:.3f}s {e['action']} replica {e['replica']} "
                   f"({e['reason']}) -> {e['live_after']} live")
+    if trace_sample is not None:
+        att = d.attribution()
+        f = att["fractions"]
+        print(f"trace ({att['spans']} spans / {att['requests']} requests): "
+              f"queue {f['queue']:.0%}, compute {f['compute']:.0%}, "
+              f"wire {f['wire']:.0%}, transcode {f['transcode']:.0%}")
+        bn = att["bottleneck"]
+        if bn is not None:
+            print(f"observed bottleneck: {bn['kind']} {bn['index']} "
+                  f"({bn['service_s']*1e3:.3f} ms/visit)")
+        if trace_out:
+            import json
+
+            with open(trace_out, "w") as fh:
+                json.dump(d.chrome_trace(), fh)
+            print(f"chrome trace written to {trace_out} "
+                  f"(load in chrome://tracing or ui.perfetto.dev)")
     return 0
 
 
@@ -349,6 +375,13 @@ def main() -> int:
                     help="comma-separated capacity fractions, one per tenant")
     ap.add_argument("--tenant-weights", default=None,
                     help="comma-separated fair-share weights, one per tenant")
+    ap.add_argument("--trace-sample", type=float, default=None,
+                    help="edge mode per-request span tracing: fraction of "
+                         "requests traced (1.0 = all); prints the "
+                         "critical-path attribution at the end")
+    ap.add_argument("--trace-out", default=None,
+                    help="edge mode: write the Chrome trace-event export "
+                         "here (requires --trace-sample)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -376,6 +409,7 @@ def main() -> int:
             admission_depth=args.admission_depth,
             model=args.model, use_pallas=args.use_pallas,
             interpret=args.interpret,
+            trace_sample=args.trace_sample, trace_out=args.trace_out,
         )
     if not args.arch:
         ap.error("--arch is required unless --edge is given")

@@ -65,6 +65,7 @@ class MultiTenantControlPlane:
         *,
         weights: dict[str, float] | None = None,
         dispatcher_node: int = 0,
+        journal=None,
     ):
         if not entries:
             raise ValueError("at least one tenant entry is required")
@@ -73,8 +74,16 @@ class MultiTenantControlPlane:
         self.weights = {
             name: float((weights or {}).get(name, 1.0)) for name in entries}
         self.dispatcher_node = dispatcher_node
-        # routing log: (tenant | None, event class name) per delivery
+        # routing log: (tenant | None, event class name) per delivery;
+        # mirrored into the shared control-plane journal when one is given
         self.routed: list[tuple[str | None, str]] = []
+        self.journal = journal
+
+    def _route(self, tenant: str | None, kind: str) -> None:
+        self.routed.append((tenant, kind))
+        if self.journal is not None:
+            self.journal.append(
+                "route", "tenancy", {"tenant": tenant, "event": kind})
 
     # -- introspection -------------------------------------------------------
     def names(self) -> tuple[str, ...]:
@@ -128,7 +137,7 @@ class MultiTenantControlPlane:
         if tenant is not None:
             entry = self.entries[tenant]  # KeyError on unknown tenant
             entry.submit(event)
-            self.routed.append((tenant, kind))
+            self._route(tenant, kind)
             return
         if isinstance(event, VersionBumped):
             raise ValueError(
@@ -140,11 +149,11 @@ class MultiTenantControlPlane:
                 # a spare node (or a retired slice's): keep the shared
                 # cluster honest; no tenant pipeline is affected
                 self.cluster.fail(event.node_id)
-                self.routed.append((None, kind))
+                self._route(None, kind)
                 return
             for name in owners:
                 self.entries[name].submit(event)
-                self.routed.append((name, kind))
+                self._route(name, kind)
             return
         if isinstance(event, NodeJoined):
             self._route_node_joined(event)
@@ -153,15 +162,15 @@ class MultiTenantControlPlane:
             owners = self.owners_of_link(event.a, event.b)
             if not owners:
                 self.cluster.degrade_link(event.a, event.b, event.factor)
-                self.routed.append((None, kind))
+                self._route(None, kind)
                 return
             self.entries[owners[0]].submit(event)
-            self.routed.append((owners[0], kind))
+            self._route(owners[0], kind)
             return
         # unknown event class: every tenant logs its own noop
         for name, entry in self.entries.items():
             entry.submit(event)
-            self.routed.append((name, kind))
+            self._route(name, kind)
 
     def _route_node_joined(self, event: NodeJoined) -> None:
         if event.comm is not None:
@@ -176,7 +185,7 @@ class MultiTenantControlPlane:
         ]
         if owners:
             self.entries[owners[0]].submit(event)
-            self.routed.append((owners[0], "NodeJoined"))
+            self._route(owners[0], "NodeJoined")
             return
         # a spare node coming back: the weakest tenant absorbs it
         self.cluster.heal(event.node_id)
@@ -190,7 +199,7 @@ class MultiTenantControlPlane:
             entry.adopt_node(node_id)
         # ReplicaSet entries adopt internally (weakest live replica)
         entry.submit(NodeJoined(node_id=node_id))
-        self.routed.append((name, "NodeJoined"))
+        self._route(name, "NodeJoined")
 
     # -- convergence ---------------------------------------------------------
     def reconcile(

@@ -37,6 +37,7 @@ from repro.cluster.events import ClusterEvent
 from repro.cluster.lifecycle import EdgeCluster
 from repro.cluster.serving import Request
 from repro.cluster.store import ArtifactStore
+from repro.obs import Journal
 from repro.tenancy.controlplane import MultiTenantControlPlane
 from repro.tenancy.router import TenancyRouter
 from repro.tenancy.scheduler import TenancyPlan, TenantScheduler
@@ -78,6 +79,7 @@ def deploy_tenants(
 
     root = (store_root if store_root is not None
             else tempfile.mkdtemp(prefix="seifer-tenants-"))
+    journal = Journal()  # ONE control-plane journal shared by every tenant
     deployments: dict[str, Any] = {}
     for idx, (tenant, placement) in enumerate(zip(tenants, plan.placements)):
         spec = _effective_spec(tenant, plan, comm)
@@ -93,6 +95,7 @@ def deploy_tenants(
                 version=version, flops_per_s=flops_per_s,
                 nodes=placement.nodes,
                 seed_offset=_TENANT_SEED_STRIDE * idx,
+                journal=journal, source_prefix=f"{tenant.name}/",
             )
         except (InfeasibleSpecError, RuntimeError) as e:
             detail = ("; ".join(i.message for i in e.issues)
@@ -111,7 +114,8 @@ def deploy_tenants(
         for name, dep in deployments.items()
     }
     weights = {t.name: t.weight for t in tenants}
-    mtcp = MultiTenantControlPlane(cluster, entries, weights=weights)
+    mtcp = MultiTenantControlPlane(
+        cluster, entries, weights=weights, journal=journal)
     router = TenancyRouter(
         {name: dep.loop for name, dep in deployments.items()},
         weights=weights,
@@ -119,7 +123,7 @@ def deploy_tenants(
     )
     return MultiTenantDeployment(
         tuple(tenants), plan, deployments, mtcp, router,
-        cluster=cluster, positions=positions,
+        cluster=cluster, positions=positions, journal=journal,
     )
 
 
@@ -167,6 +171,7 @@ class MultiTenantDeployment:
         *,
         cluster: EdgeCluster,
         positions=None,
+        journal: Journal | None = None,
     ):
         self.tenants = tenants
         self.plan = plan
@@ -175,6 +180,7 @@ class MultiTenantDeployment:
         self.router = router
         self.cluster = cluster
         self.positions = positions
+        self.journal = journal if journal is not None else Journal()
 
     # -- introspection -------------------------------------------------------
     def names(self) -> tuple[str, ...]:
@@ -274,4 +280,43 @@ class MultiTenantDeployment:
                 name: dep.metrics()
                 for name, dep in self.deployments.items()
             },
+            "journal": self.journal.summary(),
         })
+
+    # -- observability --------------------------------------------------------
+    def trace_timeline(self) -> list[dict]:
+        """Every tenant's span timeline merged (spans carry ``tenant``)."""
+        out = [s for dep in self.deployments.values()
+               for s in dep.trace_timeline()]
+        out.sort(key=lambda s: (s["tenant"] or "", s["req_id"], s["t0_s"]))
+        return out
+
+    def chrome_trace(self) -> dict | None:
+        """One Chrome trace across tenants: per-tenant pid blocks (each
+        tenant's replica pids offset past the previous tenant's), process
+        names prefixed with the tenant.  None when no tenant traces."""
+        events: list[dict] = []
+        offset = 0
+        any_traced = False
+        for name, dep in self.deployments.items():
+            ct = dep.chrome_trace()
+            if ct is None:
+                continue
+            any_traced = True
+            max_pid = 0
+            for ev in ct["traceEvents"]:
+                ev = dict(ev)
+                max_pid = max(max_pid, int(ev["pid"]))
+                ev["pid"] = int(ev["pid"]) + offset
+                if ev.get("ph") == "M":
+                    ev["args"] = {"name": f"{name}: {ev['args']['name']}"}
+                events.append(ev)
+            offset += max_pid + 1
+        if not any_traced:
+            return None
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def attribution(self) -> dict:
+        """Per-tenant critical-path attributions (None entries: no tracer)."""
+        return {name: dep.attribution()
+                for name, dep in self.deployments.items()}

@@ -265,7 +265,8 @@ def test_every_benchmark_declares_its_artifact_name():
     for mod in ("algo_scaling", "approx_ratio", "bandwidth_sweep",
                 "churn_throughput", "fig3_bottleneck", "joint_opt",
                 "kernel_bench", "kernel_path", "latency_pareto",
-                "multi_tenant", "replica_scaling", "throughput_scaling"):
+                "multi_tenant", "observability", "replica_scaling",
+                "throughput_scaling"):
         m = importlib.import_module(f"benchmarks.{mod}")
         assert isinstance(m.ARTIFACT, str) and m.ARTIFACT, mod
 
